@@ -1,0 +1,48 @@
+"""Roofline table from the dry-run JSONs (experiments/dryrun/*.json).
+
+Per (arch x shape x mesh): the three roofline terms in seconds, the dominant
+bottleneck, MODEL_FLOPS / HLO_FLOPs (useful-compute ratio), and the roofline
+fraction = compute_term / max(all terms) — the score the perf loop drives up.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records(mesh: str = "single") -> list[dict]:
+    recs = []
+    if not os.path.isdir(DRYRUN_DIR):
+        return recs
+    for fn in sorted(os.listdir(DRYRUN_DIR)):
+        if fn.endswith(f"__{mesh}.json"):
+            with open(os.path.join(DRYRUN_DIR, fn)) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def roofline_table(mesh: str = "single"):
+    rows = []
+    for r in load_records(mesh):
+        rf = r["roofline"]
+        terms = {"compute": rf["compute_s"], "memory": rf["memory_s"],
+                 "collective": rf["collective_s"]}
+        bound = max(terms.values())
+        frac = rf["compute_s"] / bound if bound else 0.0
+        rows.append([
+            r["arch"], r["shape"],
+            f"{rf['compute_s'] * 1e3:9.1f}",
+            f"{rf['memory_s'] * 1e3:9.1f}",
+            f"{rf['collective_s'] * 1e3:9.1f}",
+            rf["dominant"],
+            f"{rf['useful_ratio']:.3f}",
+            f"{frac * 100:5.1f}%",
+            f"{r['memory']['peak_bytes'] / 2**30:6.2f}",
+        ])
+    return (f"Roofline baseline — {mesh} mesh "
+            "(terms in ms/step; frac = compute/dominant)",
+            ["arch", "shape", "compute", "memory", "collective", "bound",
+             "useful", "roofline%", "peakGiB"], rows)

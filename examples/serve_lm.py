@@ -1,0 +1,12 @@
+"""Serve a reduced LM: batched prefill + greedy decode with a donated KV
+cache — the same step functions the decode_32k / long_500k dry-runs lower.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch zamba2-2.7b
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--smoke"] + sys.argv[1:]
+    main()

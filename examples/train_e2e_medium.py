@@ -1,0 +1,56 @@
+"""End-to-end driver: train a ~20M-param llama-family model for 300 steps on
+the full substrate (sharded step fn, prefetch pipeline, async checkpoints,
+supervisor).  CPU-sized stand-in for the ~100M/few-hundred-steps run the
+framework does on real hardware with the full configs.
+
+    PYTHONPATH=src python examples/train_e2e_medium.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import PrefetchIterator, SyntheticTokenDataset
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_smoke_mesh
+from repro.models.config import ModelConfig
+from repro.runtime import TrainSupervisor
+
+CFG = ModelConfig(
+    name="demo-20m", n_layers=8, d_model=256, n_heads=8, n_kv_heads=4,
+    d_ff=704, vocab=8192, loss_chunk=64,
+)
+
+if __name__ == "__main__":
+    print(f"params: {CFG.param_count() / 1e6:.1f}M")
+    mesh = make_smoke_mesh()
+    ds = SyntheticTokenDataset(CFG.vocab, seq_len=128, global_batch=8)
+    with jax.set_mesh(mesh):
+        mk = steps_mod.make_train_step(CFG, mesh, "adamw", lr=3e-4)
+        batch0 = ds.batch(0)
+        jitted = mk["jit"]({k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                            for k, v in batch0.items()})
+        sup = TrainSupervisor("/tmp/e2e_medium_ckpt", ckpt_every=100)
+        state, start, idx = sup.restore_or_init(
+            mk["make_init"](jax.random.PRNGKey(0)),
+            jax.eval_shape(mk["make_init"](jax.random.PRNGKey(0))))
+        it = PrefetchIterator(ds, start_index=idx)
+        losses = []
+
+        def cb(step, metrics, dt):
+            losses.append(float(metrics["loss"]))
+            if step % 25 == 0:
+                print(f"step {step:4d}  loss {losses[-1]:.4f}  "
+                      f"{dt * 1e3:.0f} ms", flush=True)
+
+        t0 = time.time()
+        state, last, _ = sup.run(
+            state, lambda s, b: jitted(s, {k: jnp.asarray(v)
+                                           for k, v in b.items()}),
+            it, start, 300, cb)
+        it.close()
+        print(f"\n300 steps in {time.time() - t0:.0f}s; "
+              f"loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+              f"(drop {losses[0] - losses[-1]:.3f})")
+        assert losses[-1] < losses[0] - 0.3, "training failed to learn"
+        print("END-TO-END TRAINING: OK")

@@ -1,0 +1,14 @@
+"""Train a reduced LM end-to-end with the full production substrate:
+sharded step functions, prefetching data pipeline, checkpointing supervisor.
+
+    PYTHONPATH=src python examples/train_lm.py --arch gemma2-9b --steps 30
+(any of the 10 assigned archs works; reduced smoke config on CPU)
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--smoke", "--steps", "30",
+                "--ckpt-dir", "/tmp/repro_example_ckpt"] + sys.argv[1:]
+    main()

@@ -1,0 +1,4 @@
+"""CARLA on TPU: the paper's reconfigurable conv dataflows as a production
+JAX framework (core analytic model + Pallas kernels + multi-pod LM stack)."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,29 @@
+"""CARLA core: the paper's contribution as composable JAX modules."""
+from .carla import ConvPlan, carla_conv, plan_conv
+from .cost_model import (
+    LayerCost,
+    NetworkCost,
+    layer_cost,
+    network_cost,
+    resnet50_cost,
+    vgg16_cost,
+)
+from .modes import (
+    ConvLayer,
+    Dataflow,
+    Stationarity,
+    select_dataflow,
+    select_stationarity,
+)
+from .networks import (
+    resnet50_conv_layers,
+    resnet50_projection_shortcuts,
+    vgg16_conv_layers,
+)
+
+__all__ = [
+    "ConvLayer", "ConvPlan", "Dataflow", "LayerCost", "NetworkCost",
+    "Stationarity", "carla_conv", "layer_cost", "network_cost", "plan_conv",
+    "resnet50_conv_layers", "resnet50_projection_shortcuts", "resnet50_cost",
+    "select_dataflow", "select_stationarity", "vgg16_conv_layers", "vgg16_cost",
+]

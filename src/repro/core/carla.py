@@ -1,0 +1,57 @@
+"""CARLA public API: reconfigurable convolution with per-layer mode dispatch.
+
+``carla_conv`` is the paper's accelerator as a composable JAX op: given any
+NHWC convolution, it consults the controller (``core.modes``) to pick the
+dataflow the ASIC would have used, routes to the corresponding kernel, and can
+report the analytic cost (cycles / DRAM accesses / PUF) the ASIC model
+predicts for that layer — so a network built from ``carla_conv`` carries its
+own performance model, exactly like the paper's evaluation methodology.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .cost_model import LayerCost, layer_cost
+from .modes import ConvLayer, Dataflow, select_dataflow
+
+
+@dataclass(frozen=True)
+class ConvPlan:
+    layer: ConvLayer
+    dataflow: Dataflow
+    cost: LayerCost
+
+
+def plan_conv(x_shape: tuple[int, ...], w_shape: tuple[int, ...],
+              stride: int = 1, padding: int = 0, name: str = "conv") -> ConvPlan:
+    """Controller decision + analytic cost for a conv of the given shapes."""
+    _, h, _, cin = x_shape
+    fh, fw, _, k = w_shape
+    layer = ConvLayer(name, IL=h, IC=cin, K=k, FL=fh, S=stride, Z=padding)
+    return ConvPlan(layer, select_dataflow(layer), layer_cost(layer))
+
+
+def carla_conv(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1,
+               padding: int = 0, impl: str = "auto") -> jnp.ndarray:
+    """Reconfigurable convolution: dispatches on the controller's mode choice.
+
+    x: (B, H, W, C); w: (FH, FW, C, K) (use (1, 1, C, K) or (C, K) for 1x1).
+    """
+    if w.ndim == 2:
+        w = w[None, None]
+    fh, fw = w.shape[:2]
+    plan = plan_conv(x.shape, w.shape, stride, padding)
+
+    if plan.dataflow in (Dataflow.CONV1X1_FEATURE_STATIONARY,
+                         Dataflow.CONV1X1_WEIGHT_STATIONARY):
+        # Both 1x1 modes are the dual-stationarity GEMM; ops.conv1x1 picks the
+        # residency from the feature count (the same quantity the paper uses).
+        return ops.conv1x1(x, w[0, 0], stride=stride, impl=impl)
+
+    # 3x3 serial accumulation and 7x7 row decomposition share the
+    # tap-accumulation kernel (the MXU removes the 3-tap register limit that
+    # forced the ASIC's 21-piece split; see kernels/conv2d.py docstring).
+    return ops.conv2d(x, w, stride=stride, padding=padding, impl=impl)

@@ -1,0 +1,66 @@
+"""Filter-plane decomposition — paper §III.D / Fig 7, explicitly.
+
+CARLA handles FL >= 5 by splitting each filter row into pieces of at most
+N=3 taps (the CU has 3 cascaded PEs).  A 7x7 filter becomes 21 pieces:
+14 rows-of-3 and 7 rows-of-1 (7 = 3+3+1 per row, 7 rows).  Each piece runs
+on the 3x3 row-wise machinery; the analytic model charges a pass per piece.
+
+On the MXU the register-width constraint disappears (kernels/conv2d.py
+loops taps directly), so this module serves the analytic model, the tests
+that pin the paper's numbers, and as executable documentation; correctness
+is proven by reassembling a conv from its pieces.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from .modes import N_PE_PER_CU
+
+
+@dataclass(frozen=True)
+class FilterPiece:
+    row: int          # filter row index
+    col_start: int    # first tap column
+    n_taps: int       # 1..N_PE_PER_CU
+
+
+def decompose_filter(fl: int, n: int = N_PE_PER_CU) -> list[FilterPiece]:
+    """Split an FL x FL filter plane into rows of <= n taps (Fig 7)."""
+    pieces = []
+    for r in range(fl):
+        c = 0
+        while c < fl:
+            taps = min(n, fl - c)
+            pieces.append(FilterPiece(r, c, taps))
+            c += taps
+    return pieces
+
+
+def piece_count(fl: int, n: int = N_PE_PER_CU) -> tuple[int, int, int]:
+    """(total, full-width pieces, remainder pieces) — Fig 7: 7x7 -> (21,14,7)."""
+    ps = decompose_filter(fl, n)
+    full = sum(1 for p in ps if p.n_taps == n)
+    return len(ps), full, len(ps) - full
+
+
+def conv_from_pieces(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1,
+                     padding: int = 0) -> jnp.ndarray:
+    """Reassemble conv(x, w) as the sum of per-piece row convolutions.
+
+    Numerically identical to the direct convolution — the §III.D claim that
+    piece-wise computation 'preserves computation flow homogeneity' without
+    changing results.  x: (B,H,W,C); w: (FL,FL,C,K).
+    """
+    from repro.kernels.ref import conv2d_ref
+
+    fl = w.shape[0]
+    out = None
+    for p in decompose_filter(fl):
+        wp = jnp.zeros_like(w)
+        wp = wp.at[p.row, p.col_start:p.col_start + p.n_taps].set(
+            w[p.row, p.col_start:p.col_start + p.n_taps])
+        y = conv2d_ref(x, wp, stride=stride, padding=padding)
+        out = y if out is None else out + y
+    return out

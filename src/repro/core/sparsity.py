@@ -1,0 +1,55 @@
+"""Structured (channel) sparsity support — paper §IV.A / Table I.
+
+CARLA benefits from *structured* filter pruning: removing a filter removes an
+output channel (and the corresponding input channel of the next layer), so the
+dataflow is unchanged and there is no indexing overhead.  This module provides:
+
+  * ``prune_plan`` — given per-layer keep-fractions, the pruned channel counts
+    with next-layer input-channel propagation (the paper's Table I pattern);
+  * ``prune_conv_weights`` / ``prune_channels`` — functional pruning of actual
+    JAX weight pytrees by channel-importance (L1 norm), used by the sparse
+    ResNet-50 example and tests.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def channel_importance(w: jnp.ndarray) -> jnp.ndarray:
+    """L1 importance per output channel; w: (FL, FL, IC, K) -> (K,)."""
+    return jnp.sum(jnp.abs(w), axis=tuple(range(w.ndim - 1)))
+
+
+def topk_channel_mask(w: jnp.ndarray, keep_fraction: float) -> np.ndarray:
+    """Boolean keep-mask over output channels (static, host-side)."""
+    k = w.shape[-1]
+    n_keep = max(1, int(round(k * keep_fraction)))
+    imp = np.asarray(channel_importance(w))
+    keep = np.zeros(k, dtype=bool)
+    keep[np.argsort(-imp)[:n_keep]] = True
+    return keep
+
+
+def prune_conv_weights(w: jnp.ndarray, keep_out: np.ndarray,
+                       keep_in: np.ndarray | None = None) -> jnp.ndarray:
+    """Slice (FL, FL, IC, K) weights down to kept in/out channels."""
+    if keep_in is not None:
+        w = w[..., keep_in, :]
+    return w[..., keep_out]
+
+
+def prune_plan(widths: list[int], keep_fractions: list[float]) -> list[tuple[int, int]]:
+    """Propagate channel pruning through a chain of conv layers.
+
+    widths[i] = output channels of layer i; returns [(IC_i, K_i)] after pruning,
+    where layer i's IC is layer i-1's pruned K (the paper's Table I pattern).
+    """
+    assert len(widths) == len(keep_fractions)
+    out: list[tuple[int, int]] = []
+    prev_k = None
+    for w_i, f_i in zip(widths, keep_fractions):
+        k = max(1, int(round(w_i * f_i)))
+        out.append((prev_k if prev_k is not None else -1, k))
+        prev_k = k
+    return out

@@ -1,0 +1,3 @@
+from .pipeline import PrefetchIterator, SyntheticTokenDataset
+
+__all__ = ["PrefetchIterator", "SyntheticTokenDataset"]

@@ -1,0 +1,112 @@
+"""CARLA 3x3-mode convolution on TPU — output-stationary serial accumulation.
+
+The paper's §III.A dataflow, transplanted to the TPU memory hierarchy:
+
+* **Output-stationary accumulation**: the output tile lives in an fp32 VMEM
+  scratch across the whole reduction (filter taps x input-channel blocks) —
+  CARLA's partial results living in the wide SRAM until a sub-out-fmap is done.
+* **Serial accumulation over filter rows**: the kernel loops filter rows
+  (outer) then columns (inner), accumulating shifted input-window GEMMs — the
+  MXU-era analogue of the 3-PE accumulator chain.  The ASIC needed to split
+  rows into <=3-tap pieces (§III.D, 21 pieces for 7x7) because a CU has 3
+  cascaded PEs; the MXU has no such register-width limit, so each row is one
+  loop level and the 7x7 decomposition lives only in the analytic model.
+* **Feedback-path reuse**: the input spatial block is fetched to VMEM *once*
+  per (batch, channel-block) and re-read for every tap — the halo rows are
+  never re-fetched from HBM, which is exactly the economics of the paper's
+  pipeline feedback paths.
+* **Paired-SRAM overlap**: Pallas grid pipelining double-buffers the streamed
+  weight tiles while compute proceeds.
+
+Zero padding is applied by index arithmetic in the wrapper (pad once in HBM);
+the paper's MUX-based zero-pad insertion is register-level micro-architecture
+with no TPU analogue (see DESIGN.md §2) — the *goal* (no wasted work on pads)
+holds here by construction.
+
+Layout: NHWC activations, HWIO weights, fp32 accumulation (MXU native).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BK = 128   # output-channel tile
+BC = 128   # input-channel tile
+
+
+def _conv2d_kernel(x_ref, w_ref, o_ref, acc_ref, *,
+                   fh: int, fw: int, stride: int, n_c: int):
+    """grid = (B, K/bk, C/bc); c innermost (reduction axis).
+
+    x_ref: (1, HP, WP, bc) padded input block (VMEM-resident across all taps)
+    w_ref: (fh, fw, bc, bk) weight tile (streamed)
+    o_ref: (1, OH, OW, bk); acc_ref: fp32 (OH, OW, bk) scratch.
+    """
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    oh, ow, bk = acc_ref.shape
+    x = x_ref[0]                      # (HP, WP, bc) — one fetch, all taps reuse
+    w = w_ref[...]
+    acc = acc_ref[...]
+    # Serial accumulation: filter rows outer (the CU chain), columns inner.
+    for r in range(fh):
+        for s in range(fw):
+            window = lax.slice(
+                x, (r, s, 0),
+                (r + stride * (oh - 1) + 1, s + stride * (ow - 1) + 1, x.shape[2]),
+                (stride, stride, 1))                       # (OH, OW, bc)
+            acc += jnp.dot(window.reshape(oh * ow, -1), w[r, s],
+                           preferred_element_type=jnp.float32
+                           ).reshape(oh, ow, bk)
+    acc_ref[...] = acc
+
+    @pl.when(c == n_c - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1,
+           padding: int = 0, bk: int = BK, bc: int = BC,
+           interpret: bool = True) -> jnp.ndarray:
+    """x: (B, H, W, C), w: (FH, FW, C, K) -> (B, OH, OW, K)."""
+    b, h, wd, cin = x.shape
+    fh, fw, cin2, k = w.shape
+    assert cin == cin2, (x.shape, w.shape)
+    oh = (h - fh + 2 * padding) // stride + 1
+    ow = (wd - fw + 2 * padding) // stride + 1
+
+    bc = min(bc, cin)
+    bk = min(bk, k)
+    # Pad: spatial zero-pads (once, in HBM) + channel pads to tile multiples.
+    cpad = (-cin) % bc
+    kpad = (-k) % bk
+    xp = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, cpad)))
+    wp = jnp.pad(w, ((0, 0), (0, 0), (0, cpad), (0, kpad)))
+    hp, wp_ = xp.shape[1], xp.shape[2]
+    n_c = (cin + cpad) // bc
+    n_k = (k + kpad) // bk
+
+    out = pl.pallas_call(
+        functools.partial(_conv2d_kernel, fh=fh, fw=fw, stride=stride, n_c=n_c),
+        grid=(b, n_k, n_c),
+        in_specs=[
+            # input block: resident across all taps of a (b, c) visit
+            pl.BlockSpec((1, hp, wp_, bc), lambda i, j, l: (i, 0, 0, l)),
+            # weight tile: streamed
+            pl.BlockSpec((fh, fw, bc, bk), lambda i, j, l: (0, 0, l, j)),
+        ],
+        out_specs=pl.BlockSpec((1, oh, ow, bk), lambda i, j, l: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, oh, ow, k + kpad), x.dtype),
+        scratch_shapes=[pltpu.VMEM((oh, ow, bk), jnp.float32)],
+        interpret=interpret,
+    )(xp, wp)
+    return out[..., :k]

@@ -1,0 +1,133 @@
+"""CARLA dual-stationarity GEMM — the paper's 1x1-mode operand swap on TPU.
+
+Two Pallas kernels implementing the same GEMM ``(M, C) @ (C, K)`` with opposite
+residency choices, mirroring the paper's §III.B / §III.C reconfiguration:
+
+* **activation-stationary** (§III.B analogue): the activation row-block
+  ``(bm, C)`` is fetched into VMEM *once* per M-block (its BlockSpec index map
+  ignores the k and c grid axes, so Pallas keeps it resident) while weight
+  tiles ``(bc, bk)`` stream past it.  The output tile is accumulated
+  output-stationary in an fp32 VMEM scratch, exactly like CARLA's partial
+  results living in the wide SRAM pair.  Use when M (tokens) >= one MXU tile:
+  training / prefill.
+
+* **weight-stationary** (§III.C analogue): M is tiny (decode: one token per
+  sequence), so the whole activation ``(M, C)`` is resident and weight column
+  blocks ``(C, bk)`` stream through exactly once — Eq (11)'s "each filter
+  weight is only fetched once".  Use when M < one MXU tile: decode.
+
+``matmul`` picks the variant via ``core.modes.select_stationarity`` — the
+software twin of CARLA's controller.  Grid pipelining double-buffers the
+streamed operand, the TPU analogue of the paper's paired wide/narrow SRAMs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.modes import Stationarity, select_stationarity
+
+# MXU-aligned default tiles.
+BM, BK, BC = 128, 128, 512
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    rem = (-x.shape[axis]) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+# --------------------------- activation-stationary ---------------------------
+def _mm_act_stationary_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_c: int, bc: int):
+    """grid = (M/bm, K/bk, C/bc); c innermost is the reduction axis."""
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Slice the resident activation block; stream the weight tile past it.
+    acc_ref[...] += jnp.dot(x_ref[:, pl.ds(c * bc, bc)], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(c == n_c - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_act_stationary(x: jnp.ndarray, w: jnp.ndarray, *,
+                          bm: int = BM, bk: int = BK, bc: int = BC,
+                          interpret: bool = True) -> jnp.ndarray:
+    """(M, C) @ (C, K); activation row-block VMEM-resident, weights stream."""
+    m, c = x.shape
+    c2, k = w.shape
+    assert c == c2, (x.shape, w.shape)
+    bm, bk, bc = min(bm, m), min(bk, k), min(bc, c)
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bc)
+    wp = _pad_to(_pad_to(w, 0, bc), 1, bk)
+    mp, cp = xp.shape
+    kp = wp.shape[1]
+    n_c = cp // bc
+
+    out = pl.pallas_call(
+        functools.partial(_mm_act_stationary_kernel, n_c=n_c, bc=bc),
+        grid=(mp // bm, kp // bk, n_c),
+        in_specs=[
+            # resident: index map ignores (k, c) -> fetched once per m block
+            pl.BlockSpec((bm, cp), lambda i, j, l: (i, 0)),
+            # streamed weight tiles
+            pl.BlockSpec((bc, bk), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, kp), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :k]
+
+
+# ---------------------------- weight-stationary ------------------------------
+def _mm_weight_stationary_kernel(x_ref, w_ref, o_ref):
+    """grid = (K/bk,); x fully resident; each weight block fetched once."""
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...],
+                         preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def matmul_weight_stationary(x: jnp.ndarray, w: jnp.ndarray, *,
+                             bk: int = BK, interpret: bool = True) -> jnp.ndarray:
+    """(M, C) @ (C, K) with small M: the decode GEMV-like shape."""
+    m, c = x.shape
+    c2, k = w.shape
+    assert c == c2, (x.shape, w.shape)
+    bk = min(bk, k)
+    wp = _pad_to(w, 1, bk)
+    kp = wp.shape[1]
+    out = pl.pallas_call(
+        _mm_weight_stationary_kernel,
+        grid=(kp // bk,),
+        in_specs=[
+            pl.BlockSpec((m, c), lambda j: (0, 0)),     # resident activations
+            pl.BlockSpec((c, bk), lambda j: (0, j)),    # weights stream once
+        ],
+        out_specs=pl.BlockSpec((m, bk), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, kp), x.dtype),
+        interpret=interpret,
+    )(x, wp)
+    return out[:, :k]
+
+
+def matmul(x: jnp.ndarray, w: jnp.ndarray, *, interpret: bool = True,
+           stationarity: Stationarity | None = None) -> jnp.ndarray:
+    """CARLA-style reconfigurable GEMM: pick residency from the M extent."""
+    if stationarity is None:
+        stationarity = select_stationarity(x.shape[0])
+    if stationarity == Stationarity.WEIGHT_STATIONARY:
+        return matmul_weight_stationary(x, w, interpret=interpret)
+    return matmul_act_stationary(x, w, interpret=interpret)

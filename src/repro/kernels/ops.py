@@ -1,0 +1,84 @@
+"""jit'd wrappers + reconfigurable dispatch over the Pallas kernels.
+
+``impl`` selects the execution engine:
+  * ``"pallas"`` — the Pallas TPU kernels (run under interpret=True on CPU);
+  * ``"ref"``    — the pure-jnp oracles (XLA-compiled; fast on CPU, and what
+                   the LM models use so that 512-device dry-runs lower to
+                   plain HLO convolutions/GEMMs);
+  * ``"auto"``   — pallas on TPU backends, ref elsewhere.
+
+Mode selection (which dataflow/stationarity) is orthogonal to ``impl`` and
+always follows ``core.modes`` — the software twin of CARLA's controller.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.modes import Stationarity, select_stationarity
+from . import ref as _ref
+from .conv1d import conv1d_causal as _conv1d_pallas
+from .conv2d import conv2d as _conv2d_pallas
+from .matmul import (
+    matmul_act_stationary,
+    matmul_weight_stationary,
+)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return impl
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "impl"))
+def conv2d(x, w, *, stride: int = 1, padding: int = 0, impl: str = "auto"):
+    """General NHWC conv; CARLA 3x3/7x7 serial-accumulation dataflow."""
+    if _resolve(impl) == "pallas":
+        return _conv2d_pallas(x, w, stride=stride, padding=padding,
+                              interpret=not _on_tpu())
+    return _ref.conv2d_ref(x, w, stride=stride, padding=padding).astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "impl"))
+def conv1x1(x, w, *, stride: int = 1, impl: str = "auto"):
+    """Pointwise conv via the dual-stationarity GEMM (paper §III.B/C)."""
+    if stride != 1:
+        x = x[:, ::stride, ::stride, :]
+    b, h, wd, c = x.shape
+    k = w.shape[-1]
+    xf = x.reshape(b * h * wd, c)
+    if _resolve(impl) == "pallas":
+        st = select_stationarity(xf.shape[0])
+        fn = (matmul_weight_stationary if st == Stationarity.WEIGHT_STATIONARY
+              else matmul_act_stationary)
+        out = fn(xf, w, interpret=not _on_tpu())
+    else:
+        out = _ref.matmul_ref(xf, w).astype(x.dtype)
+    return out.reshape(b, h, wd, k)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "stationarity"))
+def gemm(x, w, *, impl: str = "auto",
+         stationarity: Stationarity | None = None):
+    """(M, C) @ (C, K) with CARLA stationarity planning."""
+    if _resolve(impl) == "pallas":
+        st = stationarity or select_stationarity(x.shape[0])
+        fn = (matmul_weight_stationary if st == Stationarity.WEIGHT_STATIONARY
+              else matmul_act_stationary)
+        return fn(x, w, interpret=not _on_tpu())
+    return _ref.matmul_ref(x, w).astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def conv1d_causal(x, w, *, impl: str = "auto"):
+    """Depthwise causal conv1d (Mamba2 short conv / RWKV token shift)."""
+    if _resolve(impl) == "pallas":
+        return _conv1d_pallas(x, w, interpret=not _on_tpu())
+    return _ref.conv1d_causal_ref(x, w).astype(x.dtype)

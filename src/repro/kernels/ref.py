@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth for tests).
+
+All convs are NHWC / HWIO, matching the kernels.  These are deliberately
+written with ``jax.lax`` reference primitives (conv_general_dilated, einsum)
+rather than hand-rolled loops, so they are trustworthy and fast on CPU.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d_ref(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+               padding: int = 0) -> jnp.ndarray:
+    """x: (B, H, W, C), w: (FH, FW, C, K) -> (B, OH, OW, K). fp32 accumulate."""
+    return lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def conv1x1_ref(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """x: (B, H, W, C), w: (C, K); pointwise conv == GEMM over channels."""
+    if stride != 1:
+        x = x[:, ::stride, ::stride, :]
+    return jnp.einsum("bhwc,ck->bhwk", x.astype(jnp.float32),
+                      w.astype(jnp.float32))
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: (M, C), w: (C, K) -> (M, K) with fp32 accumulation."""
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def conv1d_causal_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal 1-D conv (Mamba2 / token-shift style).
+
+    x: (B, T, C), w: (FL, C)  ->  (B, T, C);  out[t] = sum_r x[t-FL+1+r] * w[r].
+    """
+    fl = w.shape[0]
+    xf = x.astype(jnp.float32)
+    pad = jnp.pad(xf, ((0, 0), (fl - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xf)
+    for r in range(fl):
+        out = out + pad[:, r:r + x.shape[1], :] * w[r].astype(jnp.float32)
+    return out

@@ -1,0 +1,172 @@
+"""Named-axis sharding rules for params, batches, and decode caches.
+
+Strategy (DESIGN.md §4):
+  * 'model' (TP): attention head dims, FFN hidden dim, MoE d_ff, vocab dim.
+  * 'data' (FSDP+EP): the non-TP dim of every large 2-D weight, the MoE
+    expert axis, and the batch.  Optimizer states inherit these specs
+    (optim.state_pspec), so parameter+state memory scales 1/(data*model).
+  * 'pod': pure data parallelism across pods (params replicated across pods,
+    gradient all-reduce crosses DCN once per step — the axis gradient
+    compression targets).
+
+KV caches: batch shards over 'data' when divisible, otherwise (long_500k,
+batch=1) the *sequence* axis shards over 'data' (sequence parallelism); the
+sequence axis additionally shards over 'model' — kv-head counts (3..32) don't
+reliably divide 16, sequence always does.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .mesh import batch_axes
+
+# path keys
+_COLUMN_PARALLEL = {"wq", "wk", "wv", "wi", "wg", "ck", "cr", "in_proj",
+                    "shared_ffn"}
+_ROW_PARALLEL = {"wo", "cv", "out_proj"}
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        else:
+            out.append(str(p))
+    return out
+
+
+PROD_AXIS_SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def _filter_spec(spec: tuple, shape: tuple, sizes: dict) -> P:
+    """Drop sharded axes that do not divide their dim (e.g. vocab 49155)."""
+    out = []
+    for dim, ax in enumerate(spec):
+        if ax is None or dim >= len(shape):
+            out.append(None)
+            continue
+        axs = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in axs:
+            n *= sizes.get(a, 1)
+        out.append(ax if shape[dim] % n == 0 else None)
+    return P(*out)
+
+
+def param_pspec(path, leaf, sizes: dict = PROD_AXIS_SIZES) -> P:
+    """PartitionSpec for one parameter leaf, keyed on its tree path.
+
+    Stacked (scan-over-groups) params carry a leading group axis -> specs are
+    right-aligned to the trailing (true weight) dims.  Axes that do not
+    divide a dim are dropped (granite's 49155 vocab, mixtral's 8 experts).
+    """
+    names = _path_names(path)
+    ndim = leaf.ndim
+
+    def align(*spec):
+        """Right-align spec to the leaf rank (leading axes unsharded)."""
+        pad = (None,) * (ndim - len(spec))
+        return _filter_spec(pad + spec, leaf.shape, sizes)
+
+    # embeddings / head
+    if "embed" in names:                       # (V, d): V-FSDP, d-TP
+        return align("data", "model")
+    if "head" in names:                        # (d, V): d-FSDP, V-TP
+        return align("data", "model")
+
+    # MoE stacks: (G, E, d, f) / (G, E, f, d) / router (G, d, E)
+    if "moe" in names:
+        e_dim = leaf.shape[-3] if ndim >= 3 else 0
+        ep_ok = e_dim % sizes.get("data", 1) == 0
+        if names[-1] in ("wi", "wg"):
+            return align("data", None, "model") if ep_ok else \
+                align(None, "data", "model")
+        if names[-1] == "wo":
+            return align("data", "model", None) if ep_ok else \
+                align(None, "model", "data")
+        if names[-1] == "router":
+            return align(None, None)
+
+    # 2-D projection weights ("w" leaf under a named projection)
+    for nm in names:
+        if nm in _COLUMN_PARALLEL and ndim >= 2:
+            return align("data", "model")
+        if nm in _ROW_PARALLEL and ndim >= 2:
+            return align("model", "data")
+
+    # rwkv decay lora / conv weights: shard the d_model-sized axis
+    if names[-1] == "wA":
+        return align("data", None)
+    if names[-1] == "wB":
+        return align(None, "data")
+    if names[-1] == "conv_w":
+        return align(None, "model")
+
+    return P()   # norms, biases, scalars: replicated
+
+
+def make_param_shardings(mesh, params):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_pspec(path, leaf, sizes)),
+        params)
+
+
+def make_param_pspecs(params, sizes: dict = PROD_AXIS_SIZES):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_pspec(path, leaf, sizes), params)
+
+
+# ------------------------------ batches --------------------------------------
+def batch_pspec(mesh, batch) -> dict:
+    """Shard every batch leaf along its leading (batch) axis."""
+    ba = P(batch_axes(mesh))
+    out = {}
+    for k, v in batch.items():
+        shape = v.shape
+        out[k] = P(batch_axes(mesh), *([None] * (len(shape) - 1)))
+    return out
+
+
+def make_batch_shardings(mesh, batch):
+    return {k: NamedSharding(mesh, s) for k, s in batch_pspec(mesh, batch).items()}
+
+
+# ------------------------------- caches --------------------------------------
+def _divisible(n: int, axes: tuple, mesh) -> bool:
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return n % size == 0 and n >= size
+
+
+def cache_entry_pspec(mesh, path, leaf, batch_size: int) -> P:
+    """KV ('k'/'v'): (G, B, S, Kh, dh); recurrent states: (G, B, ...)."""
+    ba = batch_axes(mesh)
+    ndim = leaf.ndim
+    name = _path_names(path)[-1]
+    if name in ("k", "v"):                               # KV cache (G,B,S,Kh,dh)
+        if _divisible(batch_size, ba, mesh):
+            return P(None, ba, "model", None, None)      # B over data, S over model
+        return P(None, None, ba + ("model",), None, None)  # seq parallelism
+    # recurrent states (ssm/conv/wkv/sx_*): shard batch if possible
+    if ndim >= 2 and _divisible(batch_size, ba, mesh):
+        return P(None, ba, *([None] * (ndim - 2)))
+    return P(*([None] * ndim))
+
+
+def make_cache_pspecs(mesh, cache, batch_size: int):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: cache_entry_pspec(mesh, path, leaf, batch_size),
+        cache)
+
+
+def make_cache_shardings(mesh, cache, batch_size: int):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, cache_entry_pspec(mesh, path, leaf, batch_size)), cache)

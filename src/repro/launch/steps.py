@@ -1,0 +1,199 @@
+"""jit-compiled distributed step functions: train, prefill, decode.
+
+Each ``make_*`` returns (fn, in_shardings, out_shardings, example_inputs)
+so the launcher runs them and the dry-run lowers/compiles them from
+ShapeDtypeStructs without allocating anything.
+
+TrainState is a plain dict so checkpointing / sharding trees stay uniform.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import make_optimizer, state_pspec
+
+from .mesh import batch_axes
+from .sharding import (
+    make_cache_pspecs,
+    make_param_pspecs,
+)
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ------------------------------ input specs ----------------------------------
+def input_specs(cfg: ModelConfig, shape, kind: str | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    kind = kind or shape.kind
+    b, t = shape.global_batch, shape.seq_len
+    f32, i32, bf16 = jnp.float32, jnp.int32, jnp.bfloat16
+    if kind == "train":
+        batch = {"labels": jax.ShapeDtypeStruct((b, t), i32)}
+        if cfg.input_mode == "embeds":
+            batch["embeds"] = jax.ShapeDtypeStruct((b, t, cfg.d_model), bf16)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((b, t), i32)
+        return batch
+    if kind == "prefill":
+        batch = {}
+        if cfg.input_mode == "embeds":
+            batch["embeds"] = jax.ShapeDtypeStruct((b, t, cfg.d_model), bf16)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((b, t), i32)
+        return batch
+    if kind == "decode":
+        batch = {"pos": jax.ShapeDtypeStruct((b,), i32)}
+        if cfg.input_mode == "embeds":
+            batch["embeds"] = jax.ShapeDtypeStruct((b, 1, cfg.d_model), bf16)
+        else:
+            batch["token"] = jax.ShapeDtypeStruct((b, 1), i32)
+        return batch
+    raise ValueError(kind)
+
+
+def param_specs(cfg: ModelConfig, key=None):
+    """ShapeDtypeStructs of the param tree via eval_shape (no allocation)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: lm.init_params(cfg, k), key)
+
+
+def cache_specs(cfg: ModelConfig, batch_size: int, max_seq: int):
+    return jax.eval_shape(
+        lambda: lm.init_cache(cfg, batch_size, max_seq))
+
+
+# ------------------------------ train step -----------------------------------
+def make_train_step(cfg: ModelConfig, mesh, optimizer_name: str = "adamw",
+                    lr=3e-4):
+    opt = make_optimizer(optimizer_name, lr)
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        def lf(p):
+            return lm.loss_fn(cfg, p, batch)
+
+        loss, grads = jax.value_and_grad(lf)(params)
+        new_params, new_opt = opt.update(grads, state["opt"], params)
+        metrics = {"loss": loss, "step": state["step"] + 1}
+        return {"params": new_params, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    p_structs = param_specs(cfg)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    p_spec = make_param_pspecs(p_structs, sizes)
+    o_spec = state_pspec(opt.name, p_spec, p_structs)
+    state_spec = {"params": p_spec, "opt": o_spec, "step": P()}
+    ba = None  # filled per-mesh below
+
+    def batch_spec_of(batch_struct):
+        return {k: P(batch_axes(mesh), *([None] * (v.ndim - 1)))
+                for k, v in batch_struct.items()}
+
+    def make_init(key):
+        def init():
+            params = lm.init_params(cfg, key)
+            return {"params": params, "opt": opt.init(params),
+                    "step": jnp.zeros((), jnp.int32)}
+        return init
+
+    return {
+        "fn": train_step,
+        "opt": opt,
+        "state_spec": state_spec,
+        "batch_spec_of": batch_spec_of,
+        "make_init": make_init,
+        "jit": lambda batch_struct: jax.jit(
+            train_step,
+            in_shardings=(_named(mesh, state_spec),
+                          _named(mesh, batch_spec_of(batch_struct))),
+            out_shardings=(_named(mesh, state_spec),
+                           _named(mesh, {"loss": P(), "step": P()})),
+            donate_argnums=(0,)),
+    }
+
+
+# ------------------------------ serve steps ----------------------------------
+def make_prefill(cfg: ModelConfig, mesh, max_seq: int):
+    def prefill_fn(params, batch):
+        return lm.prefill(cfg, params, batch, max_seq)
+
+    p_structs = param_specs(cfg)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    p_spec = make_param_pspecs(p_structs, sizes)
+
+    def jit(batch_struct):
+        b = next(iter(batch_struct.values())).shape[0]
+        batch_spec = {k: P(batch_axes(mesh), *([None] * (v.ndim - 1)))
+                      for k, v in batch_struct.items()}
+        c_struct = cache_specs(cfg, b, max_seq)
+        c_spec = make_cache_pspecs(mesh, c_struct, b)
+        vocab_ax = "model" if cfg.vocab % mesh.shape["model"] == 0 else None
+        logits_spec = P(batch_axes(mesh), None, vocab_ax)
+        return jax.jit(prefill_fn,
+                       in_shardings=(_named(mesh, p_spec),
+                                     _named(mesh, batch_spec)),
+                       out_shardings=(NamedSharding(mesh, logits_spec),
+                                      _named(mesh, c_spec)))
+
+    return {"fn": prefill_fn, "param_spec": p_spec, "jit": jit}
+
+
+def _strip_data_axis(spec: P) -> P:
+    """C3 (§Perf): serving params keep only the TP ('model') sharding."""
+    return P(*[None if a == "data" or (isinstance(a, tuple) and "data" in a)
+               else a for a in tuple(spec)])
+
+
+def make_decode_step(cfg: ModelConfig, mesh, max_seq: int, batch_size: int):
+    from repro import perf
+
+    def decode_fn(params, cache, batch):
+        logits, new_cache = lm.decode_step(cfg, params, batch, cache)
+        return logits, new_cache
+
+    p_structs = param_specs(cfg)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    p_spec = make_param_pspecs(p_structs, sizes)
+    if perf.get().tp_serving_params:
+        p_spec = jax.tree.map(_strip_data_axis, p_spec,
+                              is_leaf=lambda x: isinstance(x, P))
+    c_struct = cache_specs(cfg, batch_size, max_seq)
+    c_spec = make_cache_pspecs(mesh, c_struct, batch_size)
+
+    def jit(batch_struct):
+        batch_spec = {k: P(batch_axes(mesh), *([None] * (v.ndim - 1)))
+                      if v.shape[0] == batch_size and batch_size %
+                      _basize(mesh) == 0 else P(*([None] * v.ndim))
+                      for k, v in batch_struct.items()}
+        vocab_ax = "model" if cfg.vocab % mesh.shape["model"] == 0 else None
+        logits_spec = (P(batch_axes(mesh), None, vocab_ax)
+                       if batch_size % _basize(mesh) == 0
+                       else P(None, None, vocab_ax))
+        return jax.jit(decode_fn,
+                       in_shardings=(_named(mesh, p_spec),
+                                     _named(mesh, c_spec),
+                                     _named(mesh, batch_spec)),
+                       out_shardings=(NamedSharding(mesh, logits_spec),
+                                      _named(mesh, c_spec)),
+                       donate_argnums=(1,))
+
+    return {"fn": decode_fn, "param_spec": p_spec, "cache_spec": c_spec,
+            "cache_struct": c_struct, "jit": jit}
+
+
+def _basize(mesh) -> int:
+    n = 1
+    for a in batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n

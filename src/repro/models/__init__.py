@@ -1,0 +1,13 @@
+"""Model substrate: layers, attention, MoE, SSM, the unified LM, and CNNs."""
+from .config import ModelConfig
+from .lm import (
+    decode_step,
+    forward_train,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)
+
+__all__ = ["ModelConfig", "decode_step", "forward_train", "init_cache",
+           "init_params", "loss_fn", "prefill"]

@@ -1,0 +1,288 @@
+"""Grouped-query attention with RoPE / M-RoPE, soft-capping, sliding windows,
+and a KV cache for decode.
+
+One implementation serves all assigned attention archs:
+  * GQA with arbitrary (n_heads, n_kv_heads),
+  * RoPE (llama-family) and M-RoPE (qwen2-vl: 3 sections over the head dim
+    rotated by temporal/height/width position ids),
+  * attention-logit soft-capping (gemma2),
+  * sliding-window masks (mixtral SWA; gemma2 local layers get a per-layer
+    ``is_local`` flag so the local/global alternation can live inside one
+    scanned layer stack),
+  * decode path: one query token against a (possibly sequence-sharded) cache.
+
+All score/softmax math in fp32; activations bf16.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro import perf
+
+from .layers import dense, dense_init
+from .sharding_hints import BATCH, constrain
+
+NEG_INF = -2.3819763e38  # bf16-safe large negative
+
+
+# ------------------------------- RoPE ----------------------------------------
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, T, H, dh); pos: (B, T) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)                    # (dh/2,)
+    ang = pos[..., None].astype(jnp.float32) * freqs          # (B, T, dh/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, pos3: jnp.ndarray, theta: float,
+                sections: tuple[int, int, int]) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.  pos3: (3, B, T) = (temporal, h, w) ids.
+
+    The dh/2 rotary frequencies are split into three contiguous sections,
+    each rotated by its own position stream.  For pure-text positions the
+    three streams coincide and M-RoPE == RoPE.
+    """
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                             # (dh/2,)
+    sec = jnp.concatenate([jnp.full((s,), i, jnp.int32)
+                           for i, s in enumerate(sections)])  # (dh/2,)
+    # pick per-frequency position stream: (B, T, dh/2)
+    pos_sel = jnp.take(pos3.astype(jnp.float32), sec, axis=0)  # (dh/2, B, T)
+    ang = jnp.moveaxis(pos_sel, 0, -1) * freqs                 # (B, T, dh/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------ params ---------------------------------------
+def attention_init(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   d_head: int):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, d_model, n_heads * d_head),
+        "wk": dense_init(kk, d_model, n_kv_heads * d_head),
+        "wv": dense_init(kv, d_model, n_kv_heads * d_head),
+        "wo": dense_init(ko, n_heads * d_head, d_model),
+    }
+
+
+def _qkv(params, x, n_heads, n_kv_heads, d_head):
+    b, t, _ = x.shape
+    q = dense(params["wq"], x, x.dtype).reshape(b, t, n_heads, d_head)
+    k = dense(params["wk"], x, x.dtype).reshape(b, t, n_kv_heads, d_head)
+    v = dense(params["wv"], x, x.dtype).reshape(b, t, n_kv_heads, d_head)
+    return q, k, v
+
+
+def _gqa_scores(q, k):
+    """q: (B, T, H, dh), k: (B, S, Kh, dh) -> (B, Kh, H/Kh, T, S) fp32.
+
+    With perf.bf16_attn_io the operands stay bf16 (fp32 accumulation via
+    preferred_element_type) — no fp32 copy of the KV cache materializes.
+    """
+    b, t, h, dh = q.shape
+    kh = k.shape[2]
+    qg = q.reshape(b, t, kh, h // kh, dh)
+    if perf.get().bf16_attn_io:
+        sc = jnp.einsum("btkgd,bskd->bkgts", qg, k,
+                        preferred_element_type=jnp.float32)
+    else:
+        sc = jnp.einsum("btkgd,bskd->bkgts", qg.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    return sc * (dh ** -0.5)
+
+
+def _gqa_out(scores, v, dtype):
+    """scores: (B, Kh, G, T, S) fp32; v: (B, S, Kh, dh)."""
+    w = jax.nn.softmax(scores, axis=-1)
+    if perf.get().bf16_attn_io:
+        out = jnp.einsum("bkgts,bskd->btkgd", w.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+    else:
+        out = jnp.einsum("bkgts,bskd->btkgd", w, v.astype(jnp.float32))
+    b, t, kh, g, dh = out.shape
+    return out.reshape(b, t, kh * g, dh).astype(dtype)
+
+
+def _causal_window_mask(t: int, s: int, q_offset, window: int | jnp.ndarray):
+    """(T, S) bool; True = attendable.  window<=0 disables the window."""
+    qpos = q_offset + jnp.arange(t)[:, None]          # (T, 1)
+    kpos = jnp.arange(s)[None, :]                     # (1, S)
+    causal = kpos <= qpos
+    win_ok = jnp.logical_or(window <= 0, kpos > qpos - window)
+    return jnp.logical_and(causal, win_ok)
+
+
+# --------------------------- blockwise (flash) --------------------------------
+def flash_attention(q, k, v, *, window: int = 0, attn_softcap: float = 0.0,
+                    block_q: int = 512, block_k: int = 512):
+    """Blockwise causal attention with running log-sum-exp (FlashAttention
+    dataflow in pure jnp: outer scan over query blocks, inner scan over KV
+    blocks).  Never materializes the (T, S) score matrix — required for the
+    32k prefill / 4k train shapes.
+
+    q: (B, T, H, dh); k, v: (B, S, Kh, dh).  Returns (B, T, H, dh).
+    """
+    b, t, h, dh = q.shape
+    s = k.shape[1]
+    kh = k.shape[2]
+    g = h // kh
+    bq, bk = min(block_q, t), min(block_k, s)
+    nq, nk = t // bq, s // bk
+    assert t % bq == 0 and s % bk == 0, (t, s, bq, bk)
+
+    # Token sharding: batch over ('pod','data'); the within-block query rows
+    # over 'model' (sequence parallelism — every mesh axis divides bq=512
+    # regardless of head count).  KV replicated across 'model' (gathered).
+    # perf.bf16_attn_io keeps Q/K/V bf16 (fp32 accumulation in the einsums):
+    # halves the dominant score-block HBM traffic vs fp32 copies.
+    io_dt = q.dtype if perf.get().bf16_attn_io else jnp.float32
+    qg = q.reshape(b, nq, bq, kh, g, dh).astype(io_dt)
+    qg = constrain(qg, (BATCH, None, "model", None, None, None))
+    kb = k.reshape(b, nk, bk, kh, dh).astype(io_dt)
+    kb = constrain(kb, (BATCH, None, None, None, None))
+    vb = v.reshape(b, nk, bk, kh, dh).astype(io_dt)
+    vb = constrain(vb, (BATCH, None, None, None, None))
+    scale = dh ** -0.5
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def q_block(qi, q_blk):
+        """q_blk: (B, bq, Kh, G, dh).  Rematerialized in backward so the
+        (bq, bk) score blocks are never saved across the whole (T, S) plane."""
+        def kv_block(carry, ki):
+            acc, m, l = carry
+            kblk = kb[:, ki]                        # (B, bk, Kh, dh)
+            vblk = vb[:, ki]
+            sc = jnp.einsum("bqkgd,bskd->bkgqs", q_blk, kblk,
+                            preferred_element_type=jnp.float32) * scale
+            if attn_softcap and attn_softcap > 0:
+                sc = attn_softcap * jnp.tanh(sc / attn_softcap)
+            qpos = qi * bq + jnp.arange(bq)[:, None]
+            kpos = ki * bk + jnp.arange(bk)[None, :]
+            ok = kpos <= qpos
+            if window and window > 0:
+                ok = jnp.logical_and(ok, kpos > qpos - window)
+            sc = jnp.where(ok[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((b, kh, g, bq, dh), jnp.float32)
+        m0 = jnp.full((b, kh, g, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, bq), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_block, (acc0, m0, l0),
+                                      jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)      # (B, Kh, G, bq, dh)
+        return jnp.moveaxis(out, 3, 1)                    # (B, bq, Kh, G, dh)
+
+    def scan_body(_, inp):
+        qi, q_blk = inp
+        return None, q_block(qi, q_blk)
+
+    _, outs = jax.lax.scan(scan_body, None,
+                           (jnp.arange(nq), jnp.moveaxis(qg, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1)                        # (B, nq, bq, Kh, G, dh)
+    return out.reshape(b, t, h, dh)
+
+
+# ------------------------------ forward --------------------------------------
+def attention(params, x, *, n_heads: int, n_kv_heads: int, d_head: int,
+              rope_theta: float = 1e4, window: int | jnp.ndarray = 0,
+              attn_softcap: float = 0.0, mrope_sections=None, pos=None,
+              pos3=None):
+    """Full (training / prefill) self-attention.  x: (B, T, d)."""
+    b, t, _ = x.shape
+    q, k, v = _qkv(params, x, n_heads, n_kv_heads, d_head)
+    if pos is None:
+        pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    if mrope_sections is not None:
+        p3 = pos3 if pos3 is not None else jnp.broadcast_to(pos[None], (3, b, t))
+        q = apply_mrope(q, p3, rope_theta, mrope_sections)
+        k = apply_mrope(k, p3, rope_theta, mrope_sections)
+    else:
+        q = apply_rope(q, pos, rope_theta)
+        k = apply_rope(k, pos, rope_theta)
+
+    if t > 1024:
+        # blockwise flash path: (T, S) scores never materialize
+        out = flash_attention(q, k, v, window=int(window) if not
+                              isinstance(window, jnp.ndarray) else window,
+                              attn_softcap=attn_softcap).astype(x.dtype)
+    else:
+        scores = _gqa_scores(q, k)
+        if attn_softcap and attn_softcap > 0:
+            scores = attn_softcap * jnp.tanh(scores / attn_softcap)
+        mask = _causal_window_mask(t, t, 0, window)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        out = _gqa_out(scores, v, x.dtype)
+    return dense(params["wo"], out.reshape(b, t, -1), x.dtype), (k, v)
+
+
+def attention_decode(params, x, cache_k, cache_v, pos, *, n_heads: int,
+                     n_kv_heads: int, d_head: int, rope_theta: float = 1e4,
+                     window: int | jnp.ndarray = 0, attn_softcap: float = 0.0,
+                     mrope_sections=None, rolling_window: int = 0):
+    """One-token decode.  x: (B, 1, d); cache_{k,v}: (B, S, Kh, dh); pos: (B,).
+
+    Returns (out, new_cache_k, new_cache_v).  Attention runs over the full
+    cache buffer with position masking, so the cache can be sequence-sharded
+    (XLA turns the masked softmax reduction into partial sums + all-reduce).
+
+    With ``rolling_window`` > 0 the cache is a ring buffer of that many slots
+    (perf.windowed_local_cache): slot = pos % W, and slot s holds the token
+    at position pos - ((pos - s) mod W) — the CARLA move of never fetching
+    data the dataflow cannot use.
+    """
+    b = x.shape[0]
+    q, k, v = _qkv(params, x, n_heads, n_kv_heads, d_head)
+    posb = pos[:, None]                                    # (B, 1)
+    if mrope_sections is not None:
+        p3 = jnp.broadcast_to(posb[None], (3, b, 1))
+        q = apply_mrope(q, p3, rope_theta, mrope_sections)
+        k = apply_mrope(k, p3, rope_theta, mrope_sections)
+    else:
+        q = apply_rope(q, posb, rope_theta)
+        k = apply_rope(k, posb, rope_theta)
+
+    slot = pos % rolling_window if rolling_window else pos
+
+    # scatter new kv at its slot (per-batch dynamic index)
+    def upd(c, new):
+        def one(cb, nb, p):
+            return jax.lax.dynamic_update_slice(cb, nb, (p, 0, 0))
+        return jax.vmap(one)(c, new, slot)
+    cache_k = upd(cache_k, k.astype(cache_k.dtype))
+    cache_v = upd(cache_v, v.astype(cache_v.dtype))
+
+    s = cache_k.shape[1]
+    scores = _gqa_scores(q, cache_k)                       # (B, Kh, G, 1, S)
+    if attn_softcap and attn_softcap > 0:
+        scores = attn_softcap * jnp.tanh(scores / attn_softcap)
+    kslot = jnp.arange(s)[None, :]                         # (1, S)
+    if rolling_window:
+        # token position stored in slot s (after this step's update)
+        kpos = posb - jnp.mod(posb - kslot, rolling_window)
+        ok = kpos >= 0
+    else:
+        kpos = kslot
+        ok = kpos <= posb                                  # causal vs cache
+        ok = jnp.logical_and(ok, jnp.logical_or(window <= 0,
+                                                kpos > posb - window))
+    scores = jnp.where(ok[:, None, None, None, :], scores, NEG_INF)
+    out = _gqa_out(scores, cache_v, x.dtype)
+    return dense(params["wo"], out.reshape(b, 1, -1), x.dtype), cache_k, cache_v

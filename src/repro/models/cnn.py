@@ -1,0 +1,134 @@
+"""ResNet-50 and VGG-16 built on ``carla_conv`` — the paper's benchmark CNNs.
+
+Every convolution goes through the CARLA mode dispatcher, so running these
+models exercises all four dataflows (7x7 decomposed, 3x3 serial accumulation,
+1x1 feature-stationary, 1x1 weight-stationary).  ``network_plan`` returns the
+per-layer mode + analytic cost — the exact tables behind the paper's Figs 8-10.
+
+Supports a ``width`` scale factor so smoke tests can instantiate the same
+topology at reduced width, and channel-keep masks for the structured-sparse
+variant (§IV.A).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.carla import carla_conv, plan_conv
+
+
+def _conv_init(key, fl: int, cin: int, k: int):
+    fan_in = fl * fl * cin
+    return jax.random.normal(key, (fl, fl, cin, k), jnp.float32) * fan_in ** -0.5
+
+
+def _bn_init(k: int):
+    return {"scale": jnp.ones((k,), jnp.float32),
+            "bias": jnp.zeros((k,), jnp.float32)}
+
+
+def _bn(params, x):
+    """Inference-folded batch norm (scale+shift; stats folded into weights)."""
+    return x * params["scale"] + params["bias"]
+
+
+# ------------------------------- ResNet-50 -----------------------------------
+def resnet50_init(key, *, width: float = 1.0, num_classes: int = 1000,
+                  sparse: bool = False):
+    """Bottleneck ResNet-50; `width` scales all channel counts (smoke tests)."""
+    w = lambda c: max(4, int(c * width))
+    h = 0.5 if sparse else 1.0
+    keys = iter(jax.random.split(key, 256))
+    params = {"conv1": _conv_init(next(keys), 7, 3, w(64)),
+              "bn1": _bn_init(w(64))}
+    groups = [("conv2", 3, w(64), w(64), w(256)),
+              ("conv3", 4, w(256), w(128), w(512)),
+              ("conv4", 6, w(512), w(256), w(1024)),
+              ("conv5", 3, w(1024), w(512), w(2048))]
+    for gname, n_blocks, cin, mid, cout in groups:
+        midp = max(2, int(mid * h))
+        for b in range(n_blocks):
+            ic = cin if b == 0 else cout
+            blk = {
+                "c1": _conv_init(next(keys), 1, ic, midp)[0, 0],
+                "bn1": _bn_init(midp),
+                "c2": _conv_init(next(keys), 3, midp, midp),
+                "bn2": _bn_init(midp),
+                "c3": _conv_init(next(keys), 1, midp, cout)[0, 0],
+                "bn3": _bn_init(cout),
+            }
+            if b == 0:
+                blk["proj"] = _conv_init(next(keys), 1, ic, cout)[0, 0]
+                blk["bnp"] = _bn_init(cout)
+            params[f"{gname}_b{b}"] = blk
+    params["fc"] = {"w": jax.random.normal(next(keys),
+                                           (w(2048), num_classes),
+                                           jnp.float32) * w(2048) ** -0.5}
+    return params
+
+
+def resnet50_apply(params, x, *, impl: str = "auto"):
+    """x: (B, H, W, 3) -> (B, num_classes).  All convs via carla_conv."""
+    relu = jax.nn.relu
+    x = relu(_bn(params["bn1"],
+                 carla_conv(x, params["conv1"], stride=2, padding=3,
+                            impl=impl)))
+    # 3x3/2 maxpool
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    n_blocks = {"conv2": 3, "conv3": 4, "conv4": 6, "conv5": 3}
+    for gname, nb in n_blocks.items():
+        for b in range(nb):
+            blk = params[f"{gname}_b{b}"]
+            stride = 2 if (b == 0 and gname != "conv2") else 1
+            sc = x
+            if "proj" in blk:
+                sc = _bn(blk["bnp"], carla_conv(x, blk["proj"], stride=stride,
+                                                impl=impl))
+            h = relu(_bn(blk["bn1"], carla_conv(x, blk["c1"], stride=stride,
+                                                impl=impl)))
+            h = relu(_bn(blk["bn2"], carla_conv(h, blk["c2"], padding=1,
+                                                impl=impl)))
+            h = _bn(blk["bn3"], carla_conv(h, blk["c3"], impl=impl))
+            x = relu(h + sc)
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ params["fc"]["w"].astype(x.dtype)
+
+
+# -------------------------------- VGG-16 -------------------------------------
+VGG_SPEC = [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)]
+
+
+def vgg16_init(key, *, width: float = 1.0, num_classes: int = 1000):
+    w = lambda c: max(4, int(c * width))
+    keys = iter(jax.random.split(key, 64))
+    params = {}
+    cin = 3
+    for gi, (c, n) in enumerate(VGG_SPEC):
+        for li in range(n):
+            params[f"g{gi}_c{li}"] = _conv_init(next(keys), 3, cin, w(c))
+            cin = w(c)
+    params["fc"] = {"w": jax.random.normal(next(keys), (cin, num_classes),
+                                           jnp.float32) * cin ** -0.5}
+    return params
+
+
+def vgg16_apply(params, x, *, impl: str = "auto"):
+    for gi, (c, n) in enumerate(VGG_SPEC):
+        for li in range(n):
+            x = jax.nn.relu(carla_conv(x, params[f"g{gi}_c{li}"], padding=1,
+                                       impl=impl))
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                  (1, 2, 2, 1), "VALID")
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ params["fc"]["w"].astype(x.dtype)
+
+
+def network_plan(layers) -> list:
+    """Per-layer CARLA plan table (mode + cycles + DRAM + PUF)."""
+    out = []
+    for l in layers:
+        p = plan_conv((1, l.IL, l.IL, l.IC), (l.FL, l.FL, l.IC, l.K),
+                      stride=l.S, padding=l.Z, name=l.name)
+        out.append(p)
+    return out

@@ -1,0 +1,75 @@
+"""Shared model layers: norms, FFNs, embeddings.
+
+Pure-functional style: ``init_*`` returns a param pytree, ``apply`` functions
+take (params, x).  Params are stored fp32 (optimizer master dtype); forward
+casts to the compute dtype at use sites.  Named with short keys so stacked
+(scan-over-layers) pytrees stay readable in checkpoints.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _split(key, n):
+    return jax.random.split(key, n)
+
+
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * scale}
+
+
+def dense(params, x, dtype=jnp.bfloat16):
+    return x @ params["w"].astype(dtype)
+
+
+def rmsnorm_init(d: int):
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return ((xf * rms) * params["g"]).astype(x.dtype)
+
+
+def ffn_init(key, d: int, d_ff: int, gated: bool = True):
+    if gated:
+        k1, k2, k3 = _split(key, 3)
+        return {"wi": dense_init(k1, d, d_ff), "wg": dense_init(k2, d, d_ff),
+                "wo": dense_init(k3, d_ff, d)}
+    k1, k2 = _split(key, 2)
+    return {"wi": dense_init(k1, d, d_ff), "wo": dense_init(k2, d_ff, d)}
+
+
+def ffn(params, x, activation: str = "silu"):
+    """SwiGLU/GeGLU when 'wg' present; plain GELU MLP otherwise."""
+    dtype = x.dtype
+    h = dense(params["wi"], x, dtype)
+    if "wg" in params:
+        act = jax.nn.silu if activation == "silu" else jax.nn.gelu
+        h = act(dense(params["wg"], x, dtype).astype(jnp.float32)).astype(dtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(dtype)
+    return dense(params["wo"], h, dtype)
+
+
+def embedding_init(key, vocab: int, d: int):
+    return {"e": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def embed(params, tokens, dtype=jnp.bfloat16):
+    return params["e"].astype(dtype)[tokens]
+
+
+def unembed(params, x):
+    """Tied output head: (B, T, d) @ (d, V)."""
+    return x @ params["e"].astype(x.dtype).T
+
+
+def softcap(x, cap: float):
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap <= 0:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)

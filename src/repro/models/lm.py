@@ -1,0 +1,455 @@
+"""Unified decoder LM covering all 10 assigned architectures.
+
+Composition model: a network is a stack of *groups*, each group a short static
+sequence of block templates (so heterogeneous stacks — gemma2's local/global
+alternation, llama4's interleaved MoE, zamba2's shared-attention period — are
+expressed inside one ``lax.scan`` over groups).  Scan-over-groups keeps the
+HLO O(1) in depth: essential both for 512-device dry-run compiles and for
+production compile times.
+
+Three entry points:
+  * ``forward_train`` — full-sequence training forward (remat-wrapped groups).
+  * ``prefill``       — full-sequence forward that also returns the decode
+                        cache (KV / SSM states / RWKV states).
+  * ``decode_step``   — one token against the cache (the ``decode_*`` /
+                        ``long_*`` shapes lower exactly this).
+
+zamba2's shared attention block: ONE set of attention+FFN weights applied
+after every group of Mamba blocks (weights closed over, not scanned), with a
+per-group KV cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .config import ModelConfig
+from .layers import (
+    dense,
+    embed,
+    embedding_init,
+    ffn,
+    ffn_init,
+    rmsnorm,
+    rmsnorm_init,
+    softcap,
+)
+from repro import perf
+
+from .sharding_hints import BATCH, constrain
+
+Params = Any
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _attn_cache_len(cfg: ModelConfig, spec: dict, max_seq: int) -> int:
+    """C2 (§Perf): sliding-window layers keep a rolling window-sized cache —
+    never store (or fetch) KV the window mask cannot use."""
+    if not perf.get().windowed_local_cache:
+        return max_seq
+    w = _attn_kwargs(cfg, spec)["window"]
+    return min(w, max_seq) if w and w > 0 else max_seq
+
+
+def _place_kv(buf, kv):
+    """Place prefill KV (G,B,T,Kh,dh) into a (G,B,W,Kh,dh) cache buffer.
+
+    For rolling buffers (W < T) the last W tokens land at slots pos %% W —
+    a roll by (T-W) %% W of the tail."""
+    w, t = buf.shape[2], kv.shape[2]
+    if t <= w:
+        return jax.lax.dynamic_update_slice(
+            buf, kv.astype(buf.dtype), (0,) * buf.ndim)
+    last = kv[:, :, t - w:].astype(buf.dtype)
+    return jnp.roll(last, (t - w) % w, axis=2)
+
+
+# ----------------------------- block templates -------------------------------
+def _group_templates(cfg: ModelConfig) -> list[dict]:
+    """Static description of the blocks inside one scanned group."""
+    g = cfg.group_size
+    out = []
+    for p in range(g):
+        if cfg.block_type == "attn":
+            is_local = cfg.local_global_period > 1 and (
+                p % cfg.local_global_period == 0)
+            is_moe = cfg.is_moe and (
+                cfg.moe_period == 1 or p % cfg.moe_period == cfg.moe_period - 1)
+            out.append({"kind": "attn", "is_local": is_local, "is_moe": is_moe})
+        elif cfg.block_type == "rwkv6":
+            out.append({"kind": "rwkv6"})
+        elif cfg.block_type == "mamba2":
+            out.append({"kind": "mamba2"})
+        else:
+            raise ValueError(cfg.block_type)
+    return out
+
+
+# ------------------------------- init ----------------------------------------
+def _init_block(cfg: ModelConfig, spec: dict, key) -> Params:
+    ks = jax.random.split(key, 4)
+    if spec["kind"] == "attn":
+        p = {
+            "ln1": rmsnorm_init(cfg.d_model),
+            "attn": attn_mod.attention_init(
+                ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head),
+            "ln2": rmsnorm_init(cfg.d_model),
+        }
+        if cfg.post_norm:
+            p["ln1p"] = rmsnorm_init(cfg.d_model)
+            p["ln2p"] = rmsnorm_init(cfg.d_model)
+        if spec["is_moe"]:
+            p["moe"] = moe_mod.moe_init(ks[1], cfg.n_experts, cfg.d_model,
+                                        cfg.d_ff)
+            if cfg.n_shared_experts:
+                p["shared_ffn"] = ffn_init(ks[2], cfg.d_model, cfg.d_ff,
+                                           gated=True)
+        else:
+            p["ffn"] = ffn_init(ks[1], cfg.d_model, cfg.d_ff,
+                                gated=cfg.ffn_type in ("swiglu", "geglu"))
+        return p
+    if spec["kind"] == "rwkv6":
+        return {
+            "ln1": rmsnorm_init(cfg.d_model),
+            "ln2": rmsnorm_init(cfg.d_model),
+            "mix": ssm_mod.rwkv6_init(ks[0], cfg.d_model, cfg.n_heads,
+                                      d_ff=cfg.d_ff),
+        }
+    if spec["kind"] == "mamba2":
+        return {
+            "ln1": rmsnorm_init(cfg.d_model),
+            "mamba": ssm_mod.mamba2_init(ks[0], cfg.d_model, cfg.ssm_state,
+                                         head_dim=cfg.ssm_head_dim,
+                                         d_conv=cfg.d_conv),
+        }
+    raise ValueError(spec)
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    templates = _group_templates(cfg)
+    k_embed, k_blocks, k_shared, k_head = jax.random.split(key, 4)
+
+    # stack per-position params over the group axis
+    blocks = {}
+    for p, spec in enumerate(templates):
+        keys = jax.random.split(jax.random.fold_in(k_blocks, p), cfg.n_groups)
+        blocks[f"p{p}"] = jax.vmap(
+            lambda k, s=spec: _init_block(cfg, s, k))(keys)
+
+    params = {
+        "embed": embedding_init(k_embed, cfg.vocab, cfg.d_model),
+        "final_norm": rmsnorm_init(cfg.d_model),
+        "blocks": blocks,
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = {
+            "w": jax.random.normal(k_head, (cfg.d_model, cfg.vocab),
+                                   jnp.float32) * cfg.d_model ** -0.5}
+    if cfg.hybrid_attn_period:   # zamba2 shared attention+FFN block
+        ka, kf = jax.random.split(k_shared)
+        params["shared_attn"] = {
+            "ln1": rmsnorm_init(cfg.d_model),
+            "attn": attn_mod.attention_init(
+                ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head),
+            "ln2": rmsnorm_init(cfg.d_model),
+            "ffn": ffn_init(kf, cfg.d_model, cfg.d_ff, gated=True),
+        }
+    return params
+
+
+# ----------------------------- block forward ---------------------------------
+def _attn_kwargs(cfg: ModelConfig, spec: dict) -> dict:
+    window = cfg.window if (cfg.local_global_period <= 1 or spec["is_local"]) \
+        else 0
+    if cfg.local_global_period > 1 and not spec["is_local"]:
+        window = 0
+    return dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                d_head=cfg.d_head, rope_theta=cfg.rope_theta,
+                window=window, attn_softcap=cfg.attn_softcap,
+                mrope_sections=cfg.mrope_sections)
+
+
+def _apply_ffn_part(cfg, spec, bp, x):
+    """FFN / MoE half of an attn block; returns (delta, aux_loss)."""
+    h = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+    if spec["is_moe"]:
+        y, aux = moe_mod.moe_ffn(bp["moe"], h, top_k=cfg.top_k,
+                                 capacity_factor=cfg.capacity_factor)
+        if cfg.n_shared_experts:
+            y = y + ffn(bp["shared_ffn"], h, activation="silu")
+        if cfg.post_norm:
+            y = rmsnorm(bp["ln2p"], y, cfg.norm_eps)
+        return y, aux
+    act = "gelu" if cfg.ffn_type == "geglu" else "silu"
+    y = ffn(bp["ffn"], h, activation=act)
+    if cfg.post_norm:
+        y = rmsnorm(bp["ln2p"], y, cfg.norm_eps)
+    return y, jnp.float32(0.0)
+
+
+def _apply_block_full(cfg, spec, bp, x, want_cache: bool):
+    """Full-sequence block.  Returns (x, cache_entry_or_None, aux)."""
+    cache = None
+    aux = jnp.float32(0.0)
+    if spec["kind"] == "attn":
+        h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        y, (k, v) = attn_mod.attention(bp["attn"], h, **_attn_kwargs(cfg, spec))
+        if cfg.post_norm:
+            y = rmsnorm(bp["ln1p"], y, cfg.norm_eps)
+        x = x + y
+        y, aux = _apply_ffn_part(cfg, spec, bp, x)
+        x = x + y
+        if want_cache:
+            cache = {"k": k, "v": v}
+    elif spec["kind"] == "mamba2":
+        h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        if want_cache:
+            y, (s, cs) = ssm_mod.mamba2(
+                bp["mamba"], h, d_state=cfg.ssm_state,
+                head_dim=cfg.ssm_head_dim, return_state=True)
+            cache = {"ssm": s, "conv": cs}
+        else:
+            y = ssm_mod.mamba2(bp["mamba"], h, d_state=cfg.ssm_state,
+                               head_dim=cfg.ssm_head_dim)
+        x = x + y
+    elif spec["kind"] == "rwkv6":
+        b = x.shape[0]
+        dh = cfg.d_model // cfg.n_heads
+        h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        s0 = jnp.zeros((b, cfg.n_heads, dh, dh), jnp.float32)
+        zprev = jnp.zeros((b, 1, cfg.d_model), jnp.float32)
+        y, last_t, s = ssm_mod.rwkv6_time_mix(bp["mix"], h, zprev, s0,
+                                              n_heads=cfg.n_heads)
+        x = x + y
+        h2 = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        y2, last_c = ssm_mod.rwkv6_channel_mix(bp["mix"], h2, zprev)
+        x = x + y2
+        if want_cache:
+            cache = {"wkv": s, "sx_t": last_t.astype(jnp.float32),
+                     "sx_c": last_c.astype(jnp.float32)}
+    else:
+        raise ValueError(spec)
+    return x, cache, aux
+
+
+def _apply_shared_attn_full(cfg, sp, x, want_cache: bool):
+    h = rmsnorm(sp["ln1"], x, cfg.norm_eps)
+    spec = {"kind": "attn", "is_local": False, "is_moe": False}
+    y, (k, v) = attn_mod.attention(sp["attn"], h, **_attn_kwargs(cfg, spec))
+    x = x + y
+    x = x + ffn(sp["ffn"], rmsnorm(sp["ln2"], x, cfg.norm_eps))
+    return x, ({"k": k, "v": v} if want_cache else None)
+
+
+# ----------------------------- full forward ----------------------------------
+def _embed_in(cfg: ModelConfig, params, batch) -> jnp.ndarray:
+    if cfg.input_mode == "embeds":
+        return batch["embeds"].astype(COMPUTE_DTYPE)
+    return embed(params["embed"], batch["tokens"], COMPUTE_DTYPE)
+
+
+def forward_train(cfg: ModelConfig, params: Params, batch) -> tuple:
+    """Returns (hidden (B,T,d), aux_loss)."""
+    templates = _group_templates(cfg)
+    x = _embed_in(cfg, params, batch)
+    x = constrain(x, (BATCH, "model", None))   # tokens: batch x seq sharding
+
+    def group_body(carry, gp):
+        x, aux = carry
+        for p, spec in enumerate(templates):
+            x, _, a = _apply_block_full(cfg, spec, gp[f"p{p}"], x, False)
+            aux = aux + a
+        if cfg.hybrid_attn_period:
+            x, _ = _apply_shared_attn_full(cfg, params["shared_attn"], x, False)
+        x = constrain(x, (BATCH, "model", None))
+        return (x, aux), None
+
+    if cfg.remat:
+        group_body = jax.checkpoint(group_body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(group_body, (x, jnp.float32(0.0)),
+                               params["blocks"])
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps), aux
+
+
+def _logits(cfg: ModelConfig, params, h):
+    if cfg.tie_embeddings:
+        w = params["embed"]["e"].astype(h.dtype).T          # (d, V)
+    else:
+        w = params["head"]["w"].astype(h.dtype)
+    logits = h @ w
+    return softcap(logits, cfg.final_softcap)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch) -> jnp.ndarray:
+    """Chunked cross-entropy: full (B,T,V) logits never materialize."""
+    h, aux = forward_train(cfg, params, batch)
+    labels = batch["labels"]
+    b, t = labels.shape
+    chunk = min(cfg.loss_chunk, t)
+    n_chunks = t // chunk
+    h = h[:, :n_chunks * chunk]
+    labels = labels[:, :n_chunks * chunk]
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def chunk_nll(hc, lc):
+        hc = constrain(hc, (BATCH, "model", None))
+        logits = _logits(cfg, params, hc).astype(jnp.float32)   # (B,c,V)
+        logits = constrain(logits, (BATCH, "model", None))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum(logz - gold)
+
+    def body(tot, i):
+        hc = jax.lax.dynamic_slice_in_dim(h, i * chunk, chunk, 1)
+        lc = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, 1)
+        return tot + chunk_nll(hc, lc), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), jnp.arange(n_chunks))
+    return total / (b * n_chunks * chunk) + 0.01 * aux
+
+
+# ------------------------------- prefill -------------------------------------
+def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int) -> Params:
+    """Zeroed decode cache matching the group/block structure."""
+    templates = _group_templates(cfg)
+    g = cfg.n_groups
+    b = batch_size
+    dh = cfg.d_head
+    cache = {}
+    for p, spec in enumerate(templates):
+        if spec["kind"] == "attn":
+            s_p = _attn_cache_len(cfg, spec, max_seq)
+            c = {"k": jnp.zeros((g, b, s_p, cfg.n_kv_heads, dh),
+                                COMPUTE_DTYPE),
+                 "v": jnp.zeros((g, b, s_p, cfg.n_kv_heads, dh),
+                                COMPUTE_DTYPE)}
+        elif spec["kind"] == "mamba2":
+            d_inner = 2 * cfg.d_model
+            n_h = d_inner // cfg.ssm_head_dim
+            d_xbc = d_inner + 2 * cfg.ssm_state
+            c = {"ssm": jnp.zeros((g, b, n_h, cfg.ssm_state, cfg.ssm_head_dim),
+                                  jnp.float32),
+                 "conv": jnp.zeros((g, b, cfg.d_conv - 1, d_xbc), jnp.float32)}
+        else:  # rwkv6
+            hd = cfg.d_model // cfg.n_heads
+            c = {"wkv": jnp.zeros((g, b, cfg.n_heads, hd, hd), jnp.float32),
+                 "sx_t": jnp.zeros((g, b, 1, cfg.d_model), jnp.float32),
+                 "sx_c": jnp.zeros((g, b, 1, cfg.d_model), jnp.float32)}
+        cache[f"p{p}"] = c
+    if cfg.hybrid_attn_period:
+        cache["shared"] = {
+            "k": jnp.zeros((g, b, max_seq, cfg.n_kv_heads, dh), COMPUTE_DTYPE),
+            "v": jnp.zeros((g, b, max_seq, cfg.n_kv_heads, dh), COMPUTE_DTYPE)}
+    return cache
+
+
+def prefill(cfg: ModelConfig, params: Params, batch, max_seq: int) -> tuple:
+    """Full-sequence forward returning (last-position logits, cache)."""
+    templates = _group_templates(cfg)
+    x = _embed_in(cfg, params, batch)
+    x = constrain(x, (BATCH, "model", None))
+    b, t, _ = x.shape
+
+    def group_body(x, gp):
+        caches = {}
+        for p, spec in enumerate(templates):
+            x, c, _ = _apply_block_full(cfg, spec, gp[f"p{p}"], x, True)
+            caches[f"p{p}"] = c
+        if cfg.hybrid_attn_period:
+            x, cs = _apply_shared_attn_full(cfg, params["shared_attn"], x, True)
+            caches["shared"] = cs
+        x = constrain(x, (BATCH, "model", None))
+        return x, caches
+
+    x, caches = jax.lax.scan(group_body, x, params["blocks"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+    # place prefill KV into the cache buffers (rolling for windowed layers)
+    cache = init_cache(cfg, b, max_seq)
+    for p, spec in enumerate(templates):
+        key = f"p{p}"
+        if spec["kind"] == "attn":
+            cache[key] = {n: _place_kv(cache[key][n], caches[key][n])
+                          for n in ("k", "v")}
+        else:
+            cache[key] = jax.tree.map(lambda b_, n: n.astype(b_.dtype),
+                                      cache[key], caches[key])
+    if cfg.hybrid_attn_period:
+        cache["shared"] = {n: _place_kv(cache["shared"][n],
+                                        caches["shared"][n])
+                           for n in ("k", "v")}
+
+    return _logits(cfg, params, x[:, -1:]), cache
+
+
+# ------------------------------ decode step ----------------------------------
+def _apply_block_decode(cfg, spec, bp, x, c, pos):
+    """One-token block step.  c: this block's cache slice (no group axis)."""
+    if spec["kind"] == "attn":
+        kw = _attn_kwargs(cfg, spec)
+        rolling = (c["k"].shape[1]
+                   if (perf.get().windowed_local_cache and kw["window"]
+                       and kw["window"] > 0) else 0)
+        h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        y, ck, cv = attn_mod.attention_decode(
+            bp["attn"], h, c["k"], c["v"], pos, rolling_window=rolling, **kw)
+        if cfg.post_norm:
+            y = rmsnorm(bp["ln1p"], y, cfg.norm_eps)
+        x = x + y
+        y, _ = _apply_ffn_part(cfg, spec, bp, x)
+        return x + y, {"k": ck, "v": cv}
+    if spec["kind"] == "mamba2":
+        h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        y, s, cs = ssm_mod.mamba2_decode(bp["mamba"], h, c["ssm"], c["conv"],
+                                         d_state=cfg.ssm_state,
+                                         head_dim=cfg.ssm_head_dim)
+        return x + y, {"ssm": s, "conv": cs}
+    # rwkv6
+    h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+    y, last_t, s = ssm_mod.rwkv6_time_mix(bp["mix"], h, c["sx_t"], c["wkv"],
+                                          n_heads=cfg.n_heads)
+    x = x + y
+    h2 = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+    y2, last_c = ssm_mod.rwkv6_channel_mix(bp["mix"], h2, c["sx_c"])
+    return x + y2, {"wkv": s, "sx_t": last_t.astype(jnp.float32),
+                    "sx_c": last_c.astype(jnp.float32)}
+
+
+def decode_step(cfg: ModelConfig, params: Params, batch, cache) -> tuple:
+    """One decode step.  batch: {"token": (B,1) or "embeds": (B,1,d),
+    "pos": (B,)}.  Returns (logits (B,1,V), new_cache)."""
+    templates = _group_templates(cfg)
+    pos = batch["pos"]
+    if cfg.input_mode == "embeds":
+        x = batch["embeds"].astype(COMPUTE_DTYPE)
+    else:
+        x = embed(params["embed"], batch["token"], COMPUTE_DTYPE)
+
+    def group_body(x, scanned):
+        gp, gc = scanned
+        new_c = {}
+        for p, spec in enumerate(templates):
+            x, nc = _apply_block_decode(cfg, spec, gp[f"p{p}"], x,
+                                        gc[f"p{p}"], pos)
+            new_c[f"p{p}"] = nc
+        if cfg.hybrid_attn_period:
+            sp = params["shared_attn"]
+            h = rmsnorm(sp["ln1"], x, cfg.norm_eps)
+            spec = {"kind": "attn", "is_local": False, "is_moe": False}
+            y, ck, cv = attn_mod.attention_decode(
+                sp["attn"], h, gc["shared"]["k"], gc["shared"]["v"], pos,
+                **_attn_kwargs(cfg, spec))
+            x = x + y
+            x = x + ffn(sp["ffn"], rmsnorm(sp["ln2"], x, cfg.norm_eps))
+            new_c["shared"] = {"k": ck, "v": cv}
+        return x, new_c
+
+    x, new_cache = jax.lax.scan(group_body, x, (params["blocks"], cache))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(cfg, params, x), new_cache

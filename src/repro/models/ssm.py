@@ -1,0 +1,327 @@
+"""Attention-free sequence mixers: Mamba2 (SSD) and RWKV-6 (Finch).
+
+Both are O(T) in sequence length (the reason the 500k-token decode shape is
+natural for these archs).  Training uses chunked/scanned parallel forms;
+decode is a single recurrent step against an O(1) state cache.
+
+CARLA applicability note (DESIGN.md §5): the WKV/SSD recurrences have no
+convolution structure, so the paper's conv dataflows do not apply to them;
+the short causal conv in Mamba2 (d_conv=4) and the RWKV token shift (2-tap)
+are exactly depthwise causal convs and use the CARLA-style serial-accumulation
+conv1d (kernels/conv1d.py) on TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import perf
+
+from .layers import dense, dense_init
+from .sharding_hints import BATCH, constrain
+
+# ------------------------------- Mamba2 --------------------------------------
+
+
+def mamba2_init(key, d_model: int, d_state: int, *, expand: int = 2,
+                head_dim: int = 64, d_conv: int = 4):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    d_xbc = d_inner + 2 * d_state            # x + B + C (single group)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * d_inner + 2 * d_state + n_heads),
+        "conv_w": jax.random.normal(ks[1], (d_conv, d_xbc), jnp.float32) * 0.2,
+        "A_log": jnp.zeros((n_heads,), jnp.float32),          # A = -exp(A_log)
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.full((n_heads,), -2.0, jnp.float32),
+        "norm_g": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[2], d_inner, d_model),
+    }
+
+
+def _ssd_chunked(xh, log_a, B, C, chunk: int):
+    """Chunked SSD scan (Mamba-2).
+
+    xh: (b, T, H, P) inputs already scaled by dt; log_a: (b, T, H) decay logs;
+    B, C: (b, T, N).  Returns ((b, T, H, P), final_state (b, H, N, P)).
+    """
+    b, t, h, p = xh.shape
+    n = B.shape[-1]
+    nc = t // chunk
+    xh = xh.reshape(b, nc, chunk, h, p)
+    la = log_a.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    cum = jnp.cumsum(la, axis=2)                               # (b,nc,L,H)
+    total = cum[:, :, -1]                                      # (b,nc,H)
+
+    # intra-chunk (quadratic within the chunk)
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # (b,nc,L,L,H) i,j
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.exp(jnp.where(tri[None, None, :, :, None], rel, -jnp.inf))
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)[..., None] * decay
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xh)
+
+    # chunk-final states: S_c = sum_j exp(total - cum_j) B_j x_j^T
+    w = jnp.exp(total[:, :, None] - cum)                       # (b,nc,L,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bc, w, xh)   # (b,nc,H,N,P)
+
+    # inter-chunk recurrence over chunk index
+    def step(s_prev, inp):
+        st, tot = inp                                          # (b,H,N,P), (b,H)
+        s_new = s_prev * jnp.exp(tot)[..., None, None] + st
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, h, n, p), xh.dtype)
+    s_final, s_before = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(total, 1, 0)))
+    s_before = jnp.moveaxis(s_before, 0, 1)                    # (b,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp",
+                         Cc, jnp.exp(cum), s_before)
+    return (y_intra + y_inter).reshape(b, t, h, p), s_final
+
+
+def mamba2(params, x, *, d_state: int, head_dim: int = 64, chunk: int = 64,
+           conv1d_fn=None, return_state: bool = False):
+    """x: (b, T, d_model) -> (b, T, d_model).  Training / prefill form.
+
+    With ``return_state`` also returns (ssm_state, conv_state) for decode."""
+    b, t, d = x.shape
+    chunk = min(chunk, t)
+    assert t % chunk == 0, (t, chunk)
+    d_inner = params["norm_g"].shape[0]
+    n_heads = d_inner // head_dim
+
+    zxbcdt = dense(params["in_proj"], x, x.dtype)
+    z, xbc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner + 2 * d_state], axis=-1)
+
+    # short causal depthwise conv (CARLA conv1d dataflow on TPU)
+    if conv1d_fn is None:
+        from repro.kernels import ref as _kref
+        conv1d_fn = lambda a, w: _kref.conv1d_causal_ref(a, w).astype(a.dtype)
+    xbc_raw = xbc
+    xbc = jax.nn.silu(conv1d_fn(xbc, params["conv_w"]).astype(jnp.float32)
+                      ).astype(x.dtype)
+    xs, B, C = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (b,T,H)
+    A = -jnp.exp(params["A_log"])                                     # (H,)
+    log_a = dt * A                                                    # (b,T,H)
+
+    xh = xs.reshape(b, t, n_heads, head_dim)
+    xdt = (xh.astype(jnp.float32) * dt[..., None])
+    y, s_final = _ssd_chunked(xdt, log_a, B.astype(jnp.float32),
+                              C.astype(jnp.float32), chunk)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, t, d_inner).astype(x.dtype)
+
+    # gated RMSNorm (Mamba2 style)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    rms = jax.lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + 1e-6)
+    y = (yf * rms * params["norm_g"]).astype(x.dtype)
+    out = dense(params["out_proj"], y, x.dtype)
+    if return_state:
+        d_conv = params["conv_w"].shape[0]
+        conv_state = xbc_raw[:, t - (d_conv - 1):, :].astype(jnp.float32)
+        return out, (s_final, conv_state)
+    return out
+
+
+def mamba2_decode(params, x, state, conv_state, *, d_state: int,
+                  head_dim: int = 64):
+    """One-token step.  x: (b, 1, d); state: (b, H, N, P);
+    conv_state: (b, d_conv-1, d_xbc).  Returns (y, state, conv_state)."""
+    b = x.shape[0]
+    d_inner = params["norm_g"].shape[0]
+    n_heads = d_inner // head_dim
+
+    zxbcdt = dense(params["in_proj"], x, x.dtype)
+    z, xbc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner + 2 * d_state], axis=-1)
+
+    # conv over (conv_state ++ xbc)
+    window = jnp.concatenate([conv_state, xbc.astype(conv_state.dtype)], axis=1)
+    conv_w = params["conv_w"]                                   # (d_conv, d_xbc)
+    out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), conv_w)
+    xbc1 = jax.nn.silu(out)[:, None, :].astype(x.dtype)         # (b,1,d_xbc)
+    new_conv_state = window[:, 1:]
+
+    xs, B, C = jnp.split(xbc1, [d_inner, d_inner + d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])[:, 0]  # (b,H)
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt * A)                                         # (b,H)
+
+    xh = xs.reshape(b, n_heads, head_dim).astype(jnp.float32)
+    Bv = B[:, 0].astype(jnp.float32)                            # (b,N)
+    Cv = C[:, 0].astype(jnp.float32)
+    upd = jnp.einsum("bn,bh,bhp->bhnp", Bv, dt, xh)
+    state = state * a[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cv, state)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(b, 1, d_inner)
+
+    yf = y * jax.nn.silu(z.astype(jnp.float32))
+    rms = jax.lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + 1e-6)
+    y = (yf * rms * params["norm_g"]).astype(x.dtype)
+    return dense(params["out_proj"], y, x.dtype), state, new_conv_state
+
+
+# ------------------------------- RWKV-6 --------------------------------------
+
+
+def rwkv6_init(key, d_model: int, n_heads: int, *, d_ff: int | None = None,
+               decay_rank: int = 64):
+    d_ff = d_ff if d_ff is not None else 4 * d_model
+    dh = d_model // n_heads
+    ks = jax.random.split(key, 10)
+    s = d_model ** -0.5
+    return {
+        "mu_x": jnp.full((d_model,), 0.5, jnp.float32),   # time-mix lerp
+        "wr": dense_init(ks[0], d_model, d_model),
+        "wk": dense_init(ks[1], d_model, d_model),
+        "wv": dense_init(ks[2], d_model, d_model),
+        "wg": dense_init(ks[3], d_model, d_model),
+        "wo": dense_init(ks[4], d_model, d_model),
+        # data-dependent decay (Finch): w_t = w0 + tanh(x A) B
+        "w0": jnp.full((d_model,), -6.0, jnp.float32),
+        "wA": jax.random.normal(ks[5], (d_model, decay_rank), jnp.float32) * s,
+        "wB": jax.random.normal(ks[6], (decay_rank, d_model), jnp.float32)
+              * decay_rank ** -0.5,
+        "u": jax.random.normal(ks[7], (n_heads, dh), jnp.float32) * 0.1,
+        "ln_g": jnp.ones((d_model,), jnp.float32),
+        # channel mix
+        "mu_c": jnp.full((d_model,), 0.5, jnp.float32),
+        "ck": dense_init(ks[8], d_model, d_ff),
+        "cv": dense_init(ks[9], d_ff, d_model),
+        "cr": dense_init(jax.random.fold_in(key, 99), d_model, d_model),
+    }
+
+
+def _token_shift(x, prev, mu):
+    """lerp(x_{t-1}, x_t, mu); prev: (b, 1, d) carried state."""
+    xm1 = jnp.concatenate([prev.astype(x.dtype), x[:, :-1]], axis=1)
+    return xm1 + mu.astype(x.dtype) * (x - xm1)
+
+
+def _wkv_chunked(r, k, v, log_decay, u, state, chunk: int):
+    """Chunked-parallel WKV6 (GLA-style) — the §Perf A1 optimization.
+
+    The per-token scan materializes the (b,H,dk,dv) state every step: O(T)
+    HBM round-trips of state-sized tensors.  The chunked form does one
+    L x L intra-chunk block (matmul, MXU-friendly) plus one state exchange
+    per chunk: state traffic drops by the chunk length.
+
+    r/k/v/log_decay: (b, T, H, D); u: (H, D); state: (b, H, D, E) fp32.
+    Decay factorization per chunk (C = inclusive cumsum of log_decay <= 0):
+      A[t,i] = sum_d r[t,d] k[i,d] e^{C[t-1,d] - C[i,d]}   (i < t)
+             = (r e^{E})(k e^{-C})^T,  E = exclusive cumsum
+    e^{-C} can overflow for extreme decay; clipped at e^30 — error only where
+    the true weight underflows to zero anyway (documented in DESIGN.md).
+    """
+    b, t, h, d = r.shape
+    e_dim = v.shape[-1]
+    nc = t // chunk
+    rc, kc, vc, wc = (z.reshape(b, nc, chunk, h, d)
+                      for z in (r, k, v, log_decay))
+
+    C = jnp.cumsum(wc, axis=2)                       # inclusive (b,nc,L,H,D)
+    E = C - wc                                       # exclusive
+    r_tilde = rc * jnp.exp(E)
+    k_tilde = kc * jnp.exp(jnp.clip(-C, None, 30.0))
+    k_hat = kc * jnp.exp(C[:, :, -1:, :, :] - C)     # <= 1, safe
+
+    # A2 (§Perf): bf16 einsum operands (fp32 accumulation) — bf16's 8-bit
+    # exponent covers the decay-scaled dynamic range; halves chunk traffic.
+    io_dt = jnp.bfloat16 if perf.get().bf16_attn_io else jnp.float32
+    rt_io, kt_io, kh_io, v_io = (z.astype(io_dt)
+                                 for z in (r_tilde, k_tilde, k_hat, vc))
+
+    # intra-chunk: strict-lower-triangular attention + diagonal u bonus
+    A = jnp.einsum("bcthd,bcihd->bchti", rt_io, kt_io,
+                   preferred_element_type=jnp.float32)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    A = jnp.where(tri[None, None, None], A, 0.0)
+    y = jnp.einsum("bchti,bcihe->bcthe", A.astype(io_dt), v_io,
+                   preferred_element_type=jnp.float32)
+    diag = jnp.einsum("bcthd,hd->bcth", rc * kc, u)
+    y = y + diag[..., None] * vc
+
+    # inter-chunk: scan carrying the state
+    decay_chunk = jnp.exp(C[:, :, -1])               # (b,nc,H,D)
+    states = jnp.einsum("bcihd,bcihe->bchde", kh_io, v_io,
+                        preferred_element_type=jnp.float32)
+
+    def step(s, inp):
+        r_t, dchunk, st = inp
+        y_inter = jnp.einsum("bthd,bhde->bthe", r_t, s)
+        s_new = s * dchunk[..., None] + st
+        return s_new, y_inter
+
+    xs = (jnp.moveaxis(r_tilde, 1, 0), jnp.moveaxis(decay_chunk, 1, 0),
+          jnp.moveaxis(states, 1, 0))
+    state, y_inter = jax.lax.scan(step, state, xs)
+    y = y + jnp.moveaxis(y_inter, 0, 1)
+    return y.reshape(b, t, h, e_dim), state
+
+
+def rwkv6_time_mix(params, x, prev_x, state, *, n_heads: int):
+    """WKV6 recurrence.  x: (b,T,d); state: (b,H,dk,dv) fp32.
+
+    Returns (out, last_x, new_state).
+    """
+    b, t, d = x.shape
+    dh = d // n_heads
+    xs = _token_shift(x, prev_x, params["mu_x"])
+
+    r = dense(params["wr"], xs, x.dtype).reshape(b, t, n_heads, dh)
+    k = dense(params["wk"], xs, x.dtype).reshape(b, t, n_heads, dh)
+    v = dense(params["wv"], xs, x.dtype).reshape(b, t, n_heads, dh)
+    g = dense(params["wg"], xs, x.dtype)
+
+    # data-dependent decay (the Finch contribution)
+    wlow = jnp.tanh(xs.astype(jnp.float32) @ params["wA"]) @ params["wB"]
+    w = params["w0"] + wlow                                    # (b,T,d)
+    log_decay = -jnp.exp(w.reshape(b, t, n_heads, dh))         # <=0
+    u = params["u"]                                            # (H, dk)
+
+    rf, kf, vf = (z.astype(jnp.float32) for z in (r, k, v))
+    pc = perf.get()
+    if pc.rwkv_chunked and t > 1 and t % min(pc.rwkv_chunk, t) == 0:
+        # §Perf A5 (refuted, reverted): constraining WKV heads over 'model'
+        # added T<->H resharding roundtrips per layer that cost more than the
+        # single gather GSPMD already inserts — measurement over theory.
+        out4, state = _wkv_chunked(rf, kf, vf, log_decay, u, state,
+                                   chunk=min(pc.rwkv_chunk, t))
+        out = out4.reshape(b, t, d)
+    else:
+        def step(s, inp):
+            rt, kt, vt, ld = inp                               # (b,H,dh) each
+            kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)           # (b,H,dk,dv)
+            out = jnp.einsum("bhk,bhkv->bhv", rt,
+                             s + u[None, :, :, None] * kv)
+            s = s * jnp.exp(ld)[..., None] + kv
+            return s, out
+
+        xs_t = (jnp.moveaxis(rf, 1, 0), jnp.moveaxis(kf, 1, 0),
+                jnp.moveaxis(vf, 1, 0), jnp.moveaxis(log_decay, 1, 0))
+        state, outs = jax.lax.scan(step, state, xs_t)
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, t, d)        # (b,T,d)
+
+    # group-norm-ish per head + silu(g) gate
+    rms = jax.lax.rsqrt(jnp.mean(out * out, axis=-1, keepdims=True) + 1e-6)
+    out = out * rms * params["ln_g"]
+    out = (out * jax.nn.silu(g.astype(jnp.float32))).astype(x.dtype)
+    return dense(params["wo"], out, x.dtype), x[:, -1:], state
+
+
+def rwkv6_channel_mix(params, x, prev_x):
+    xs = _token_shift(x, prev_x, params["mu_c"])
+    k = dense(params["ck"], xs, x.dtype)
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    r = jax.nn.sigmoid(dense(params["cr"], xs, x.dtype).astype(jnp.float32))
+    return (r * dense(params["cv"], k, x.dtype).astype(jnp.float32)
+            ).astype(x.dtype), x[:, -1:]

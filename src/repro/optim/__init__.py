@@ -1,0 +1,15 @@
+from .optimizers import (
+    Optimizer,
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    lion,
+    make_optimizer,
+    sgdm,
+    state_pspec,
+)
+from .schedule import constant, inverse_sqrt, warmup_cosine
+
+__all__ = ["Optimizer", "adafactor", "adamw", "clip_by_global_norm",
+           "constant", "inverse_sqrt", "lion", "make_optimizer", "sgdm",
+           "state_pspec", "warmup_cosine"]

@@ -1,0 +1,58 @@
+"""Gradient compression for cross-pod (DCN) all-reduce economy.
+
+At 1000+ node scale the inter-pod data-parallel all-reduce crosses DCN links
+an order of magnitude slower than ICI.  Two standard mitigations, both with
+error feedback so compression noise does not accumulate:
+
+  * bf16 compression — 2x traffic reduction, near-free accuracy-wise;
+  * int8 per-tensor-scaled compression — 4x reduction, error feedback
+    mandatory.
+
+Usage: wrap grads before ``jax.lax.pmean``/psum (or before the optimizer in a
+pjit setting where XLA inserts the all-reduce — compressing the tensors
+shrinks the collective payload correspondingly).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_bf16(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def decompress_bf16(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+
+def compress_int8(grads):
+    """Per-tensor symmetric int8 quantization.  Returns (q, scales)."""
+    def q(g):
+        gf = g.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        return jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8), scale
+    flat = jax.tree.map(q, grads, is_leaf=lambda x: isinstance(x, jnp.ndarray))
+    qs = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    ss = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return qs, ss
+
+
+def decompress_int8(qs, ss):
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, qs, ss)
+
+
+def error_feedback_compress(grads, residual, compress, decompress):
+    """g' = C(g + r);  r' = (g + r) - D(C(g + r)).  Returns (g', r')."""
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros_like(
+            g, dtype=jnp.float32), grads)
+    corrected = jax.tree.map(lambda g, r: g.astype(jnp.float32) + r,
+                             grads, residual)
+    compressed = compress(corrected)
+    if isinstance(compressed, tuple):
+        restored = decompress(*compressed)
+    else:
+        restored = decompress(compressed)
+    new_residual = jax.tree.map(lambda c, r: c - r, corrected, restored)
+    return compressed, new_residual

@@ -1,0 +1,248 @@
+"""Optimizers from scratch (no optax): AdamW, Adafactor, Lion, SGD-momentum.
+
+Functional API mirroring optax:  ``opt.init(params) -> state``;
+``opt.update(grads, state, params) -> (new_params, new_state)``.
+
+Sharding: every state leaf either matches its param's shape (Adam/Lion moments
+— shard with the param's spec) or is a factored reduction of it (Adafactor row
+/col statistics — shard with the param's spec minus the reduced axis).
+``state_pspec`` computes the correct PartitionSpec tree for any optimizer
+state given the param spec tree, so optimizer states are ZeRO-sharded by
+construction.
+
+Adafactor is the memory-sane choice for the 400B MoE config: factored second
+moment, no first moment, update clipping — ~0 bytes of state per parameter
+beyond the factored vectors.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Params], Any]
+    update: Callable[[Params, Any, Params], tuple[Params, Any]]
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+# --------------------------------- AdamW --------------------------------------
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: Params
+    nu: Params
+
+
+def adamw(lr: float | Callable = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          grad_clip: float = 1.0, moment_dtype=jnp.float32) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, dtype=moment_dtype)
+        return AdamState(jnp.zeros((), jnp.int32),
+                         jax.tree.map(z, params), jax.tree.map(z, params))
+
+    def update(grads, state, params):
+        if grad_clip:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            mhat, vhat = m_new / bc1, v_new / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * \
+                p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr_t * delta).astype(p.dtype),
+                    m_new.astype(moment_dtype), v_new.astype(moment_dtype))
+
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x:
+                             isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x:
+                             isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x:
+                             isinstance(x, tuple))
+        return new_p, AdamState(step, new_m, new_v)
+
+    return Optimizer("adamw", init, update)
+
+
+# ------------------------------- Adafactor ------------------------------------
+class FactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: Params   # row stats (param shape minus last axis); scalar v for 1-D
+    vc: Params   # col stats (param shape minus 2nd-to-last axis); unused 1-D
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor(lr: float | Callable = 1e-3, decay: float = 0.8,
+              eps: float = 1e-30, clip_threshold: float = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        def vr(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p) \
+                else jnp.zeros(p.shape, jnp.float32)
+
+        def vc(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32) \
+                if _factored(p) else jnp.zeros((), jnp.float32)
+
+        return FactorState(jnp.zeros((), jnp.int32),
+                           jax.tree.map(vr, params), jax.tree.map(vc, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** -decay
+        lr_t = lr_fn(step)
+
+        def upd(p, g, vr, vc):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if _factored(p):
+                vr_new = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc_new = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = vr_new / jnp.mean(vr_new, axis=-1, keepdims=True)
+                u = gf * jax.lax.rsqrt(rfac + eps)[..., None] * \
+                    jax.lax.rsqrt(vc_new + eps)[..., None, :]
+            else:
+                vr_new = beta * vr + (1 - beta) * g2
+                vc_new = vc
+                u = gf * jax.lax.rsqrt(vr_new)
+            # update clipping (RMS <= clip_threshold)
+            rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            pf = p.astype(jnp.float32)
+            pf = pf - lr_t * (u + weight_decay * pf)
+            return pf.astype(p.dtype), vr_new, vc_new
+
+        out = jax.tree.map(upd, params, grads, state.vr, state.vc)
+        pick = lambda i: jax.tree.map(lambda o: o[i], out, is_leaf=lambda x:
+                                      isinstance(x, tuple))
+        return pick(0), FactorState(step, pick(1), pick(2))
+
+    return Optimizer("adafactor", init, update)
+
+
+# --------------------------------- Lion ---------------------------------------
+class LionState(NamedTuple):
+    step: jnp.ndarray
+    mu: Params
+
+
+def lion(lr: float | Callable = 1e-4, b1: float = 0.9, b2: float = 0.99,
+         weight_decay: float = 0.1, grad_clip: float = 1.0,
+         moment_dtype=jnp.bfloat16) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return LionState(jnp.zeros((), jnp.int32),
+                         jax.tree.map(lambda p: jnp.zeros_like(
+                             p, dtype=moment_dtype), params))
+
+    def update(grads, state, params):
+        if grad_clip:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        step = state.step + 1
+        lr_t = lr_fn(step)
+
+        def upd(p, g, m):
+            gf, mf = g.astype(jnp.float32), m.astype(jnp.float32)
+            pf = p.astype(jnp.float32)
+            update_dir = jnp.sign(b1 * mf + (1 - b1) * gf)
+            pf = pf - lr_t * (update_dir + weight_decay * pf)
+            m_new = (b2 * mf + (1 - b2) * gf).astype(moment_dtype)
+            return pf.astype(p.dtype), m_new
+
+        out = jax.tree.map(upd, params, grads, state.mu)
+        pick = lambda i: jax.tree.map(lambda o: o[i], out, is_leaf=lambda x:
+                                      isinstance(x, tuple))
+        return pick(0), LionState(step, pick(1))
+
+    return Optimizer("lion", init, update)
+
+
+# ----------------------------- SGD momentum -----------------------------------
+def sgdm(lr: float | Callable = 1e-2, momentum: float = 0.9) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return LionState(jnp.zeros((), jnp.int32),
+                         jax.tree.map(lambda p: jnp.zeros_like(
+                             p, dtype=jnp.float32), params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+
+        def upd(p, g, m):
+            m_new = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * m_new).astype(p.dtype), m_new
+
+        out = jax.tree.map(upd, params, grads, state.mu)
+        pick = lambda i: jax.tree.map(lambda o: o[i], out, is_leaf=lambda x:
+                                      isinstance(x, tuple))
+        return pick(0), LionState(step, pick(1))
+
+    return Optimizer("sgdm", init, update)
+
+
+# ------------------------- sharding of optimizer state ------------------------
+def state_pspec(opt_name: str, param_spec_tree, params):
+    """PartitionSpec tree for the optimizer state, given the param spec tree.
+
+    Adam/Lion moments share the param spec; Adafactor's factored stats drop
+    the reduced axis from the spec.  ZeRO-sharding by construction.
+    """
+    scalar = P()
+    if opt_name == "adamw":
+        return AdamState(scalar, param_spec_tree, param_spec_tree)
+    if opt_name in ("lion", "sgdm"):
+        return LionState(scalar, param_spec_tree)
+    if opt_name == "adafactor":
+        def _pad(spec, p):
+            s = tuple(spec) if spec is not None else ()
+            return s + (None,) * (p.ndim - len(s))
+
+        vr = jax.tree.map(lambda sp, p: P(*_pad(sp, p)[:-1]) if _factored(p)
+                          else sp, param_spec_tree, params)
+        vc = jax.tree.map(lambda sp, p: P(*(_pad(sp, p)[:-2] + _pad(sp, p)[-1:]))
+                          if _factored(p) else P(), param_spec_tree, params)
+        return FactorState(scalar, vr, vc)
+    raise ValueError(opt_name)
+
+
+OPTIMIZERS = {"adamw": adamw, "adafactor": adafactor, "lion": lion,
+              "sgdm": sgdm}
+
+
+def make_optimizer(name: str, lr, **kw) -> Optimizer:
+    return OPTIMIZERS[name](lr=lr, **kw)

@@ -1,0 +1,30 @@
+"""Learning-rate schedules (callables of the int32 step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(1, warmup_steps)
+        prog = jnp.clip((s - warmup_steps) / max(1, total_steps - warmup_steps),
+                        0.0, 1.0)
+        cos = final_frac * peak + (1 - final_frac) * peak * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return fn
+
+
+def inverse_sqrt(peak: float, warmup_steps: int):
+    def fn(step):
+        s = jnp.maximum(step.astype(jnp.float32), 1.0)
+        warm = peak * s / max(1, warmup_steps)
+        decay = peak * (warmup_steps ** 0.5) / jnp.sqrt(s)
+        return jnp.where(s < warmup_steps, warm, decay)
+    return fn

@@ -1,0 +1,5 @@
+from .elastic import ElasticPlan, build_mesh, largest_pow2_leq, plan_remesh
+from .fault_tolerance import StragglerDetector, TrainSupervisor
+
+__all__ = ["ElasticPlan", "StragglerDetector", "TrainSupervisor", "build_mesh",
+           "largest_pow2_leq", "plan_remesh"]

@@ -1,0 +1,3 @@
+from .scheduler import ContinuousBatcher, Request
+
+__all__ = ["ContinuousBatcher", "Request"]

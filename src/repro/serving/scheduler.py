@@ -1,0 +1,105 @@
+"""Continuous-batching serving scheduler.
+
+Production serving keeps the decode batch full: finished sequences free
+their slot, queued requests are admitted with an immediate prefill into
+that slot, and every decode step advances all active slots together —
+exactly the batching regime the decode_32k dry-run shape models.
+
+Single-host implementation with the production structure: a slot table
+(per-slot position / remaining budget / request id), a FIFO admission
+queue, and step functions that reuse the repro.models prefill/decode paths.
+The KV cache is one fixed (G, B, S, ...) buffer; admission writes a new
+request's prefill KV into its slot (no reallocation — slots are the unit
+of elasticity).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, init_cache, lm
+from repro.models.config import ModelConfig
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: jnp.ndarray          # (T,) int32 (or (T, d) embeds)
+    max_new_tokens: int
+    generated: list = field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    def __init__(self, cfg: ModelConfig, params, *, batch_slots: int,
+                 max_seq: int):
+        self.cfg = cfg
+        self.params = params
+        self.b = batch_slots
+        self.max_seq = max_seq
+        self.cache = init_cache(cfg, batch_slots, max_seq)
+        self.pos = jnp.zeros((batch_slots,), jnp.int32)
+        self.slot_req: list[Request | None] = [None] * batch_slots
+        self.queue: list[Request] = []
+        self.completed: list[Request] = []
+
+    # ------------------------------ admission --------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self, slot: int, req: Request):
+        """Prefill the request into its slot's cache region."""
+        t = req.prompt.shape[0]
+        batch = {"tokens": req.prompt[None]}
+        logits, cache1 = lm.prefill(self.cfg, self.params, batch,
+                                    max_seq=self.max_seq)
+        # copy the single-sequence cache into this slot
+        def place(buf, new):
+            return buf.at[:, slot:slot + 1].set(new)
+        self.cache = jax.tree.map(place, self.cache, cache1)
+        self.pos = self.pos.at[slot].set(t)
+        first = int(jnp.argmax(logits[0, -1]))
+        req.generated.append(first)
+        self.slot_req[slot] = req
+
+    def _fill_free_slots(self):
+        for slot in range(self.b):
+            if self.slot_req[slot] is None and self.queue:
+                self._admit(slot, self.queue.pop(0))
+
+    # -------------------------------- decode ---------------------------------
+    def step(self):
+        """One batched decode step over all active slots."""
+        self._fill_free_slots()
+        if all(r is None for r in self.slot_req):
+            return False
+        tokens = jnp.array(
+            [[r.generated[-1] if r else 0] for r in self.slot_req],
+            jnp.int32)
+        batch = {"token": tokens, "pos": self.pos}
+        logits, self.cache = decode_step(self.cfg, self.params, batch,
+                                         self.cache)
+        nxt = jnp.argmax(logits[:, -1], axis=-1)
+        self.pos = jnp.where(
+            jnp.array([r is not None for r in self.slot_req]),
+            self.pos + 1, self.pos)
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            req.generated.append(int(nxt[slot]))
+            if (len(req.generated) >= req.max_new_tokens
+                    or int(self.pos[slot]) + 1 >= self.max_seq):
+                req.done = True
+                self.completed.append(req)
+                self.slot_req[slot] = None     # slot freed for admission
+        return True
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        steps = 0
+        while (self.queue or any(self.slot_req)) and steps < max_steps:
+            if not self.step():
+                break
+            steps += 1
+        return self.completed

@@ -1,0 +1,105 @@
+"""Property-based tests (hypothesis) over the CARLA analytic model."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import layer_cost, select_dataflow
+from repro.core.cost_model import partitions_1x1, partitions_3x3
+from repro.core.modes import NUM_PES, U, ConvLayer, Dataflow
+
+conv3x3 = st.builds(
+    ConvLayer,
+    name=st.just("l"),
+    IL=st.sampled_from([7, 14, 28, 56, 112]),
+    IC=st.sampled_from([16, 64, 128, 256, 512]),
+    K=st.sampled_from([32, 64, 128, 512]),
+    FL=st.just(3), S=st.just(1), Z=st.just(1),
+)
+
+conv1x1 = st.builds(
+    ConvLayer,
+    name=st.just("l"),
+    IL=st.sampled_from([7, 14, 28, 56]),
+    IC=st.sampled_from([16, 64, 256, 1024]),
+    K=st.sampled_from([32, 64, 256, 2048]),
+    FL=st.just(1), S=st.sampled_from([1, 2]), Z=st.just(0),
+)
+
+any_layer = st.one_of(conv3x3, conv1x1)
+
+
+@settings(max_examples=200, deadline=None)
+@given(any_layer)
+def test_puf_bounded(layer):
+    """PE utilization can never exceed 1 (Eq 5 invariant)."""
+    c = layer_cost(layer)
+    assert 0 < c.puf <= 1.0 + 1e-9
+
+
+@settings(max_examples=200, deadline=None)
+@given(any_layer)
+def test_dram_at_least_unique_data(layer):
+    """DRAM accesses >= one fetch of every unique weight + output store."""
+    c = layer_cost(layer)
+    unique_w = layer.FL ** 2 * layer.IC * layer.K
+    out = layer.OL ** 2 * layer.K
+    assert c.dram_weights >= min(unique_w, c.dram_weights)  # sanity
+    assert c.dram_out == out
+    assert c.dram_in >= layer.OL ** 2 * layer.IC  # inputs touched at least once
+
+
+@settings(max_examples=100, deadline=None)
+@given(conv3x3)
+def test_cycles_linear_in_channels(layer):
+    """Eq (2): cycles scale exactly linearly with IC."""
+    c1 = layer_cost(layer).cycles
+    doubled = ConvLayer(layer.name, layer.IL, layer.IC * 2, layer.K,
+                        layer.FL, layer.S, layer.Z)
+    assert layer_cost(doubled).cycles == 2 * c1
+
+
+@settings(max_examples=100, deadline=None)
+@given(conv3x3)
+def test_cycles_step_in_filter_groups(layer):
+    """Eq (2): cycles scale with ceil(K/U) — flat within a CU group."""
+    c = layer_cost(layer)
+    kg = -(-layer.K // U)
+    per_group = c.cycles // kg
+    assert c.cycles == per_group * kg
+
+
+@settings(max_examples=100, deadline=None)
+@given(conv1x1)
+def test_1x1_mode_switch_consistent(layer):
+    """The planner's mode choice matches the paper's feature-count rule."""
+    df = select_dataflow(layer)
+    if layer.OL ** 2 < NUM_PES:
+        assert df == Dataflow.CONV1X1_WEIGHT_STATIONARY
+    else:
+        assert df == Dataflow.CONV1X1_FEATURE_STATIONARY
+
+
+@settings(max_examples=100, deadline=None)
+@given(any_layer)
+def test_pruning_never_slower(layer):
+    """Halving K and IC (structured pruning) never increases any cost."""
+    pruned = ConvLayer(layer.name, layer.IL, max(1, layer.IC // 2),
+                       max(1, layer.K // 2), layer.FL, layer.S, layer.Z)
+    c, cp = layer_cost(layer), layer_cost(pruned)
+    assert cp.cycles <= c.cycles
+    assert cp.dram_total <= c.dram_total
+
+
+@settings(max_examples=50, deadline=None)
+@given(conv3x3)
+def test_partitions_match_sram(layer):
+    """Sub-out-fmaps respect the 224-word SRAM pair (paper §III.A)."""
+    p = partitions_3x3(layer)
+    rows_per_part = -(-layer.OL // p)
+    assert rows_per_part * layer.OL <= 224 or layer.OL > 224
+
+
+@settings(max_examples=50, deadline=None)
+@given(conv1x1)
+def test_partitions_1x1_capacity(layer):
+    p = partitions_1x1(layer)
+    assert (p - 1) * NUM_PES < layer.OL ** 2 <= p * NUM_PES

@@ -1,0 +1,221 @@
+"""Per-architecture smoke tests (reduced configs) + model-level invariants.
+
+Every assigned arch instantiates its SMOKE config and runs one forward +
+train step on CPU, asserting output shapes and finiteness; decode must agree
+with prefill exactly (attention) or to bf16 tolerance (recurrent archs).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import (
+    decode_step,
+    forward_train,
+    init_params,
+    loss_fn,
+    prefill,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, t=16):
+    batch = {"labels": jax.random.randint(KEY, (b, t), 0, cfg.vocab)}
+    if cfg.input_mode == "embeds":
+        batch["embeds"] = jax.random.normal(KEY, (b, t, cfg.d_model),
+                                            jnp.bfloat16)
+    else:
+        batch["tokens"] = jax.random.randint(KEY, (b, t), 0, cfg.vocab)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(cfg, KEY)
+    batch = _batch(cfg)
+
+    h, aux = forward_train(cfg, params, batch)
+    assert h.shape == (2, 16, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(h.astype(jnp.float32))))
+
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, batch))(params)
+    assert bool(jnp.isfinite(loss))
+    gnorm = sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads)) ** 0.5
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_prefill_decode_consistency(arch):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(cfg, KEY)
+    b, t = 2, 16
+    toks = jax.random.randint(KEY, (b, t + 1), 0, cfg.vocab)
+    emb = jax.random.normal(KEY, (b, t + 1, cfg.d_model), jnp.bfloat16)
+
+    def mk(n):
+        if cfg.input_mode == "embeds":
+            return {"embeds": emb[:, :n]}
+        return {"tokens": toks[:, :n]}
+
+    full_logits, _ = prefill(cfg, params, mk(t + 1), max_seq=32)
+    _, cache = prefill(cfg, params, mk(t), max_seq=32)
+    db = {"pos": jnp.full((b,), t, jnp.int32)}
+    if cfg.input_mode == "embeds":
+        db["embeds"] = emb[:, t:t + 1]
+    else:
+        db["token"] = toks[:, t:t + 1]
+    dec_logits, _ = decode_step(cfg, params, db, cache)
+
+    err = float(jnp.max(jnp.abs(full_logits.astype(jnp.float32) -
+                                dec_logits.astype(jnp.float32))))
+    # attention archs are exact; recurrent archs accumulate bf16 noise
+    tol = 0.0 if cfg.block_type == "attn" else 5e-2
+    assert err <= tol, f"{arch}: prefill/decode mismatch {err}"
+
+
+def test_flash_matches_exact_attention():
+    from repro.models.attention import (
+        NEG_INF,
+        _causal_window_mask,
+        _gqa_out,
+        _gqa_scores,
+        flash_attention,
+    )
+    q = jax.random.normal(jax.random.PRNGKey(1), (2, 2048, 4, 32))
+    k = jax.random.normal(jax.random.PRNGKey(2), (2, 2048, 2, 32))
+    v = jax.random.normal(jax.random.PRNGKey(3), (2, 2048, 2, 32))
+    for win, cap in [(0, 0.0), (256, 0.0), (0, 30.0), (512, 50.0)]:
+        fo = flash_attention(q, k, v, window=win, attn_softcap=cap)
+        sc = _gqa_scores(q, k)
+        if cap:
+            sc = cap * jnp.tanh(sc / cap)
+        m = _causal_window_mask(2048, 2048, 0, win)
+        sc = jnp.where(m[None, None, None], sc, NEG_INF)
+        eo = _gqa_out(sc, v, jnp.float32)
+        assert float(jnp.max(jnp.abs(fo - eo))) < 5e-5
+
+
+def test_flash_backward_matches_exact():
+    from repro.models.attention import (
+        NEG_INF,
+        _causal_window_mask,
+        _gqa_out,
+        _gqa_scores,
+        flash_attention,
+    )
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1024, 2, 16))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1024, 2, 16))
+    v = jax.random.normal(jax.random.PRNGKey(3), (1, 1024, 2, 16))
+
+    def f_flash(q, k, v):
+        return jnp.sum(flash_attention(q, k, v) ** 2)
+
+    def f_exact(q, k, v):
+        sc = _gqa_scores(q, k)
+        m = _causal_window_mask(1024, 1024, 0, 0)
+        sc = jnp.where(m[None, None, None], sc, NEG_INF)
+        return jnp.sum(_gqa_out(sc, v, jnp.float32) ** 2)
+
+    g1 = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_exact, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        assert float(jnp.max(jnp.abs(a - b))) < 1e-3
+
+
+def test_mamba2_chunked_equals_recurrent():
+    from repro.models import ssm as S
+    p = S.mamba2_init(KEY, 64, 16, head_dim=32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 20, 64), jnp.float32)
+    y_chunked = S.mamba2(p, x, d_state=16, head_dim=32, chunk=4)
+
+    b = x.shape[0]
+    s = jnp.zeros((b, 4, 16, 32))
+    cs = jnp.zeros((b, 3, 160))
+    outs = []
+    for t in range(x.shape[1]):
+        y, s, cs = S.mamba2_decode(p, x[:, t:t + 1], s, cs, d_state=16,
+                                   head_dim=32)
+        outs.append(y)
+    y_rec = jnp.concatenate(outs, axis=1)
+    assert float(jnp.max(jnp.abs(y_chunked - y_rec))) < 1e-5
+
+
+def test_moe_routes_topk_mass():
+    from repro.models.moe import moe_ffn, moe_init
+    p = moe_init(KEY, 4, 32, 64)
+    x = jax.random.normal(KEY, (2, 16, 32), jnp.float32)
+    y, aux = moe_ffn(p, x, top_k=2)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(aux))
+    # aux loss ~ E * sum(me*ce) >= 1 at uniform routing
+    assert 0.5 < float(aux) < 4.0
+
+
+def test_param_counts_match_published():
+    targets = {"mixtral-8x7b": 46.7e9, "gemma2-9b": 9.2e9,
+               "qwen2-vl-7b": 7.6e9, "smollm-360m": 0.36e9,
+               "smollm-135m": 0.135e9, "rwkv6-1.6b": 1.6e9}
+    for arch, want in targets.items():
+        got = get_config(arch).param_count()
+        assert abs(got - want) / want < 0.12, (arch, got, want)
+
+    cfg = get_config("llama4-maverick-400b-a17b")
+    assert abs(cfg.param_count() - 400e9) / 400e9 < 0.05
+    assert cfg.active_param_count() < 20e9
+
+
+def test_moe_grouped_equals_flat():
+    """B3 (§Perf): shard-local grouped dispatch must not change the math
+    (when capacity is generous enough that neither path drops tokens)."""
+    from repro import perf
+    from repro.models.moe import _moe_flat, _moe_grouped, moe_init
+    p = moe_init(KEY, 4, 32, 64)
+    x = jax.random.normal(KEY, (2, 32, 32), jnp.float32)
+    with perf.flags(bf16_moe_dispatch=False):
+        y_flat, aux_f = _moe_flat(p, x, top_k=2, capacity_factor=8.0)
+        y_grp, aux_g = _moe_grouped(p, x.reshape(2, 4, 8, 32), top_k=2,
+                                    capacity_factor=8.0)
+    assert float(jnp.max(jnp.abs(y_flat - y_grp.reshape(2, 32, 32)))) < 1e-6
+    assert float(abs(aux_f - aux_g)) < 1e-6
+
+
+def test_rwkv_chunked_equals_sequential():
+    """A1 (§Perf): chunked-parallel WKV6 == per-token recurrence."""
+    from repro import perf
+    from repro.models import ssm as S
+    p = S.rwkv6_init(KEY, 128, 4, d_ff=256)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 128, 128), jnp.float32)
+    s0 = jnp.zeros((2, 4, 32, 32))
+    prev = jnp.zeros((2, 1, 128))
+    with perf.baseline():
+        y_seq, _, st_seq = S.rwkv6_time_mix(p, x, prev, s0, n_heads=4)
+    with perf.flags(rwkv_chunked=True, rwkv_chunk=32, bf16_attn_io=False):
+        y_chk, _, st_chk = S.rwkv6_time_mix(p, x, prev, s0, n_heads=4)
+    assert float(jnp.max(jnp.abs(y_seq - y_chk))) < 1e-4
+    assert float(jnp.max(jnp.abs(st_seq - st_chk))) < 1e-3
+
+
+def test_rolling_window_cache_decode_consistency():
+    """C2 (§Perf): rolling window-sized cache must equal full-cache decode."""
+    import dataclasses
+
+    from repro import perf
+    cfg = dataclasses.replace(get_config("mixtral-8x7b", smoke=True))
+    assert cfg.window > 0
+    params = init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 25), 0, cfg.vocab)
+
+    def run(flag):
+        with perf.flags(windowed_local_cache=flag):
+            _, cache = prefill(cfg, params, {"tokens": toks[:, :24]},
+                               max_seq=32)
+            db = {"token": toks[:, 24:25],
+                  "pos": jnp.full((2,), 24, jnp.int32)}
+            logits, _ = decode_step(cfg, params, db, cache)
+        return logits
+
+    a, b = run(True), run(False)
+    assert float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                                 b.astype(jnp.float32)))) < 1e-5
