@@ -20,15 +20,54 @@ from __future__ import annotations
 import os
 import shutil
 import threading
+import zlib
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:                       # optional: ~3x faster + smaller than stdlib zlib
+    import zstandard
+except ImportError:
+    zstandard = None
 
 _FLOAT_VIEWS = {"bfloat16": np.uint16}
+
+# Compression codecs, format-tagged in both the manifest and the shard file
+# extension so a checkpoint written with zstd restores on a host that only
+# has stdlib zlib available (and vice versa) with a clear error otherwise.
+_DEFAULT_CODEC = "zstd" if zstandard is not None else "zlib"
+
+
+def _compress(data: bytes, codec: str) -> bytes:
+    if codec == "zstd":
+        if zstandard is None:
+            raise ModuleNotFoundError(
+                "checkpoint codec 'zstd' requires the zstandard package; "
+                "install it or save with codec='zlib'")
+        return zstandard.ZstdCompressor(level=3).compress(data)
+    if codec == "zlib":
+        return zlib.compress(data, level=3)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
+
+
+def _decompress(data: bytes, codec: str) -> bytes:
+    if codec == "zstd":
+        if zstandard is None:
+            raise ModuleNotFoundError(
+                "this checkpoint was written with zstd; the zstandard "
+                "package is required to restore it")
+        return zstandard.ZstdDecompressor().decompress(data)
+    if codec == "zlib":
+        return zlib.decompress(data)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
+
+
+def _shard_name(host_id: int, codec: str) -> str:
+    ext = {"zstd": "zst", "zlib": "zlib"}[codec]
+    return f"shard_{host_id:05d}.msgpack.{ext}"
 
 
 def _leaf_to_bytes(x) -> dict:
@@ -49,21 +88,22 @@ def _leaf_from_bytes(d: dict):
 
 
 def save(ckpt_dir: str, step: int, tree: Any, metadata: dict | None = None,
-         host_id: int = 0) -> str:
+         host_id: int = 0, codec: str | None = None) -> str:
     """Synchronous atomic save.  Returns the final directory."""
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
     os.makedirs(tmp, exist_ok=True)
+    codec = codec or _DEFAULT_CODEC
 
     leaves, treedef = jax.tree.flatten(tree)
     payload = [_leaf_to_bytes(l) for l in leaves]
-    comp = zstandard.ZstdCompressor(level=3)
-    with open(os.path.join(tmp, f"shard_{host_id:05d}.msgpack.zst"), "wb") as f:
-        f.write(comp.compress(msgpack.packb(payload)))
+    with open(os.path.join(tmp, _shard_name(host_id, codec)), "wb") as f:
+        f.write(_compress(msgpack.packb(payload), codec))
     manifest = {
         "step": step,
         "treedef": str(treedef),
         "n_leaves": len(leaves),
+        "codec": codec,
         "metadata": metadata or {},
     }
     with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
@@ -111,9 +151,9 @@ def restore(ckpt_dir: str, step: int, like: Any, host_id: int = 0,
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(final, "manifest.msgpack"), "rb") as f:
         manifest = msgpack.unpackb(f.read())
-    dec = zstandard.ZstdDecompressor()
-    with open(os.path.join(final, f"shard_{host_id:05d}.msgpack.zst"), "rb") as f:
-        payload = msgpack.unpackb(dec.decompress(f.read()))
+    codec = manifest.get("codec", "zstd")   # pre-tag checkpoints were zstd
+    with open(os.path.join(final, _shard_name(host_id, codec)), "rb") as f:
+        payload = msgpack.unpackb(_decompress(f.read(), codec))
 
     leaves = [_leaf_from_bytes(d) for d in payload]
     _, treedef = jax.tree.flatten(like)

@@ -11,9 +11,11 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+from repro.observability import trace
 from .cost_model import LayerCost, layer_cost
 from .modes import ConvLayer, Dataflow, select_dataflow
 
@@ -34,17 +36,7 @@ def plan_conv(x_shape: tuple[int, ...], w_shape: tuple[int, ...],
     return ConvPlan(layer, select_dataflow(layer), layer_cost(layer))
 
 
-def carla_conv(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1,
-               padding: int = 0, impl: str = "auto") -> jnp.ndarray:
-    """Reconfigurable convolution: dispatches on the controller's mode choice.
-
-    x: (B, H, W, C); w: (FH, FW, C, K) (use (1, 1, C, K) or (C, K) for 1x1).
-    """
-    if w.ndim == 2:
-        w = w[None, None]
-    fh, fw = w.shape[:2]
-    plan = plan_conv(x.shape, w.shape, stride, padding)
-
+def _dispatch(x, w, plan: ConvPlan, stride: int, padding: int, impl: str):
     if plan.dataflow in (Dataflow.CONV1X1_FEATURE_STATIONARY,
                          Dataflow.CONV1X1_WEIGHT_STATIONARY):
         # Both 1x1 modes are the dual-stationarity GEMM; ops.conv1x1 picks the
@@ -55,3 +47,43 @@ def carla_conv(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1,
     # tap-accumulation kernel (the MXU removes the 3-tap register limit that
     # forced the ASIC's 21-piece split; see kernels/conv2d.py docstring).
     return ops.conv2d(x, w, stride=stride, padding=padding, impl=impl)
+
+
+def carla_conv(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1,
+               padding: int = 0, impl: str = "auto",
+               name: str = "conv") -> jnp.ndarray:
+    """Reconfigurable convolution: dispatches on the controller's mode choice.
+
+    x: (B, H, W, C); w: (FH, FW, C, K) (use (1, 1, C, K) or (C, K) for 1x1).
+
+    With tracing enabled (``observability.trace``) every dispatch records a
+    ``carla_conv`` span carrying both sides of the paper's ledger: the
+    dataflow the controller picked with its analytic ``LayerCost``
+    (cycles / DRAM bytes / PUF), and the measured wall time + bytes of the
+    kernel it actually ran (as a child span from ``kernels.ops``).
+    """
+    if w.ndim == 2:
+        w = w[None, None]
+    plan = plan_conv(x.shape, w.shape, stride, padding, name=name)
+
+    if not trace.enabled():
+        return _dispatch(x, w, plan, stride, padding, impl)
+
+    cost = plan.cost
+    with trace.span(
+            "carla_conv", layer=plan.layer.name,
+            dataflow=plan.dataflow.value,
+            x_shape=list(x.shape), w_shape=list(w.shape),
+            stride=stride, padding=padding, batch=int(x.shape[0]),
+            macs=cost.macs, dense_macs=plan.layer.dense_macs,
+            analytic_cycles=cost.cycles,
+            analytic_time_ms=cost.time_s * 1e3,
+            analytic_dram_bytes=cost.dram_bytes,
+            analytic_puf=cost.puf) as sp:
+        out = _dispatch(x, w, plan, stride, padding, impl)
+        jax.block_until_ready(out)
+        # bytes the dispatch actually touched (operands + result); the child
+        # kernel span records the same so nested sums stay consistent.
+        sp.attrs["bytes_touched"] = sum(
+            a.size * a.dtype.itemsize for a in (x, w, out))
+    return out

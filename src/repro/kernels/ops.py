@@ -9,6 +9,13 @@
 
 Mode selection (which dataflow/stationarity) is orthogonal to ``impl`` and
 always follows ``core.modes`` — the software twin of CARLA's controller.
+
+Every public entry point is telemetry-instrumented: when the global tracer is
+enabled (``observability.trace``), the dispatch records which mode the
+controller picked, operand shapes/bytes, FLOPs, and wall time under
+``block_until_ready``.  When tracing is disabled (the default) the only cost
+is one module-attribute read per call — the jitted function is invoked
+directly, no span objects or clock reads.
 """
 from __future__ import annotations
 
@@ -18,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.modes import Stationarity, select_stationarity
+from repro.observability import trace
 from . import ref as _ref
 from .conv1d import conv1d_causal as _conv1d_pallas
 from .conv2d import conv2d as _conv2d_pallas
@@ -37,18 +45,38 @@ def _resolve(impl: str) -> str:
     return impl
 
 
+def _nbytes(*arrays) -> int:
+    return sum(a.size * a.dtype.itemsize for a in arrays)
+
+
 @functools.partial(jax.jit, static_argnames=("stride", "padding", "impl"))
-def conv2d(x, w, *, stride: int = 1, padding: int = 0, impl: str = "auto"):
-    """General NHWC conv; CARLA 3x3/7x7 serial-accumulation dataflow."""
+def _conv2d_jit(x, w, *, stride: int = 1, padding: int = 0,
+                impl: str = "auto"):
     if _resolve(impl) == "pallas":
         return _conv2d_pallas(x, w, stride=stride, padding=padding,
                               interpret=not _on_tpu())
     return _ref.conv2d_ref(x, w, stride=stride, padding=padding).astype(x.dtype)
 
 
+def conv2d(x, w, *, stride: int = 1, padding: int = 0, impl: str = "auto"):
+    """General NHWC conv; CARLA 3x3/7x7 serial-accumulation dataflow."""
+    if not trace.enabled():
+        return _conv2d_jit(x, w, stride=stride, padding=padding, impl=impl)
+    fh, fw, _, k = w.shape
+    with trace.span("kernels.conv2d", impl=_resolve(impl),
+                    x_shape=list(x.shape), w_shape=list(w.shape),
+                    stride=stride, padding=padding,
+                    dtype=str(x.dtype)) as sp:
+        out = _conv2d_jit(x, w, stride=stride, padding=padding, impl=impl)
+        jax.block_until_ready(out)
+        b, oh, ow, _ = out.shape
+        sp.attrs["flops"] = 2 * b * oh * ow * k * fh * fw * x.shape[-1]
+        sp.attrs["bytes_touched"] = _nbytes(x, w, out)
+    return out
+
+
 @functools.partial(jax.jit, static_argnames=("stride", "impl"))
-def conv1x1(x, w, *, stride: int = 1, impl: str = "auto"):
-    """Pointwise conv via the dual-stationarity GEMM (paper §III.B/C)."""
+def _conv1x1_jit(x, w, *, stride: int = 1, impl: str = "auto"):
     if stride != 1:
         x = x[:, ::stride, ::stride, :]
     b, h, wd, c = x.shape
@@ -64,10 +92,27 @@ def conv1x1(x, w, *, stride: int = 1, impl: str = "auto"):
     return out.reshape(b, h, wd, k)
 
 
+def conv1x1(x, w, *, stride: int = 1, impl: str = "auto"):
+    """Pointwise conv via the dual-stationarity GEMM (paper §III.B/C)."""
+    if not trace.enabled():
+        return _conv1x1_jit(x, w, stride=stride, impl=impl)
+    b, h, wd, c = x.shape
+    rows = b * -(-h // stride) * -(-wd // stride)   # x[:, ::s, ::s] row count
+    st = select_stationarity(rows)
+    with trace.span("kernels.conv1x1", impl=_resolve(impl),
+                    x_shape=list(x.shape), w_shape=list(w.shape),
+                    stride=stride, stationarity=st.value,
+                    dtype=str(x.dtype)) as sp:
+        out = _conv1x1_jit(x, w, stride=stride, impl=impl)
+        jax.block_until_ready(out)
+        sp.attrs["flops"] = 2 * rows * c * w.shape[-1]
+        sp.attrs["bytes_touched"] = _nbytes(x, w, out)
+    return out
+
+
 @functools.partial(jax.jit, static_argnames=("impl", "stationarity"))
-def gemm(x, w, *, impl: str = "auto",
-         stationarity: Stationarity | None = None):
-    """(M, C) @ (C, K) with CARLA stationarity planning."""
+def _gemm_jit(x, w, *, impl: str = "auto",
+              stationarity: Stationarity | None = None):
     if _resolve(impl) == "pallas":
         st = stationarity or select_stationarity(x.shape[0])
         fn = (matmul_weight_stationary if st == Stationarity.WEIGHT_STATIONARY
@@ -76,9 +121,38 @@ def gemm(x, w, *, impl: str = "auto",
     return _ref.matmul_ref(x, w).astype(x.dtype)
 
 
+def gemm(x, w, *, impl: str = "auto",
+         stationarity: Stationarity | None = None):
+    """(M, C) @ (C, K) with CARLA stationarity planning."""
+    if not trace.enabled():
+        return _gemm_jit(x, w, impl=impl, stationarity=stationarity)
+    st = stationarity or select_stationarity(x.shape[0])
+    with trace.span("kernels.gemm", impl=_resolve(impl),
+                    x_shape=list(x.shape), w_shape=list(w.shape),
+                    stationarity=st.value, dtype=str(x.dtype)) as sp:
+        out = _gemm_jit(x, w, impl=impl, stationarity=stationarity)
+        jax.block_until_ready(out)
+        sp.attrs["flops"] = 2 * x.shape[0] * x.shape[1] * w.shape[-1]
+        sp.attrs["bytes_touched"] = _nbytes(x, w, out)
+    return out
+
+
 @functools.partial(jax.jit, static_argnames=("impl",))
-def conv1d_causal(x, w, *, impl: str = "auto"):
-    """Depthwise causal conv1d (Mamba2 short conv / RWKV token shift)."""
+def _conv1d_jit(x, w, *, impl: str = "auto"):
     if _resolve(impl) == "pallas":
         return _conv1d_pallas(x, w, interpret=not _on_tpu())
     return _ref.conv1d_causal_ref(x, w).astype(x.dtype)
+
+
+def conv1d_causal(x, w, *, impl: str = "auto"):
+    """Depthwise causal conv1d (Mamba2 short conv / RWKV token shift)."""
+    if not trace.enabled():
+        return _conv1d_jit(x, w, impl=impl)
+    with trace.span("kernels.conv1d_causal", impl=_resolve(impl),
+                    x_shape=list(x.shape), w_shape=list(w.shape),
+                    dtype=str(x.dtype)) as sp:
+        out = _conv1d_jit(x, w, impl=impl)
+        jax.block_until_ready(out)
+        sp.attrs["flops"] = 2 * x.size * w.shape[0]
+        sp.attrs["bytes_touched"] = _nbytes(x, w, out)
+    return out

@@ -7,6 +7,19 @@ from __future__ import annotations
 import jax
 
 
+def set_mesh(mesh):
+    """Context manager activating ``mesh`` for the block.
+
+    ``jax.set_mesh`` (ambient mesh, jax >= 0.5) when available; on older jax
+    the Mesh object itself is the context manager that makes it the default
+    for sharded computations.
+    """
+    set_fn = getattr(jax, "set_mesh", None)
+    if set_fn is not None:
+        return set_fn(mesh)
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2x16x16 = 512 chips across two pods."""
     shape = (2, 16, 16) if multi_pod else (16, 16)

@@ -17,8 +17,9 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.launch import steps as steps_mod
-from repro.launch.mesh import make_production_mesh, make_smoke_mesh
+from repro.launch.mesh import make_production_mesh, make_smoke_mesh, set_mesh
 from repro.models import lm
+from repro.observability import MetricsRegistry
 
 
 def main():
@@ -38,7 +39,7 @@ def main():
     max_seq = args.prompt_len + args.gen
 
     key = jax.random.PRNGKey(0)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = lm.init_params(cfg, key)
         if cfg.input_mode == "embeds":
             batch = {"embeds": jax.random.normal(
@@ -47,9 +48,12 @@ def main():
             batch = {"tokens": jax.random.randint(
                 key, (args.batch, args.prompt_len), 0, cfg.vocab)}
 
+        telemetry = MetricsRegistry()
         t0 = time.time()
         logits, cache = lm.prefill(cfg, params, batch, max_seq=max_seq)
         next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        telemetry.latency("prefill").observe(time.time() - t0)
+        telemetry.counter("prompt_tokens").inc(args.batch * args.prompt_len)
         print(f"prefill {args.prompt_len} tokens x{args.batch}: "
               f"{(time.time() - t0) * 1e3:.0f} ms")
 
@@ -58,6 +62,7 @@ def main():
         out_tokens = [next_tok]
         t0 = time.time()
         for i in range(args.gen - 1):
+            ts = time.perf_counter()
             db = {"pos": jnp.full((args.batch,), args.prompt_len + i,
                                   jnp.int32)}
             if cfg.input_mode == "embeds":
@@ -68,11 +73,16 @@ def main():
                 db["token"] = next_tok.astype(jnp.int32)
             logits, cache = mk["fn"](params, cache, db)
             next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+            jax.block_until_ready(next_tok)
+            telemetry.latency("decode_token").observe(time.perf_counter() - ts)
+            telemetry.counter("tokens_generated").inc(args.batch)
             out_tokens.append(next_tok)
-        jax.block_until_ready(next_tok)
         dt = (time.time() - t0) / max(1, args.gen - 1)
         toks = jnp.concatenate(out_tokens, axis=1)
         print(f"decoded {toks.shape[1]} tokens/seq @ {dt * 1e3:.0f} ms/token")
+        lw = telemetry.latency("decode_token")
+        if lw.count:
+            print(lw.format())
         print("sample:", toks[0, :12].tolist())
 
 

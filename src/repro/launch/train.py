@@ -18,7 +18,8 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.data import PrefetchIterator, SyntheticTokenDataset
 from repro.launch import steps as steps_mod
-from repro.launch.mesh import make_production_mesh, make_smoke_mesh
+from repro.launch.mesh import make_production_mesh, make_smoke_mesh, set_mesh
+from repro.observability import MetricsRegistry, trace
 from repro.runtime import TrainSupervisor
 
 
@@ -36,7 +37,11 @@ def main():
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--trace-out", default=None,
+                    help="export the span trace to this JSON path")
     args = ap.parse_args()
+    if args.trace_out:
+        trace.enable()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     mesh = (make_smoke_mesh() if args.mesh == "smoke" else
@@ -46,7 +51,7 @@ def main():
                                input_mode=cfg.input_mode,
                                d_model=cfg.d_model)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         mk = steps_mod.make_train_step(cfg, mesh, args.optimizer, args.lr)
         batch0 = ds.batch(0)
         batch_struct = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
@@ -67,8 +72,13 @@ def main():
             return jitted(state, batch)
 
         t0 = time.time()
+        telemetry = MetricsRegistry()
+        tokens_per_step = args.batch * args.seq_len
 
         def metrics_cb(step, metrics, dt):
+            telemetry.counter("steps").inc()
+            telemetry.counter("tokens").inc(tokens_per_step)
+            telemetry.latency("train_step").observe(dt)
             if step % 10 == 0 or step < 3:
                 print(f"step {step:5d}  loss {float(metrics['loss']):.4f}  "
                       f"{dt * 1e3:.0f} ms/step", flush=True)
@@ -79,6 +89,13 @@ def main():
         status = "interrupted (checkpointed)" if interrupted else "done"
         print(f"{status} at step {last}; wall {time.time() - t0:.1f}s; "
               f"stragglers observed: {len(sup.straggler.events)}")
+        lw = telemetry.latency("train_step")
+        if lw.count:
+            print(lw.format())
+            print(f"throughput {telemetry.counter('tokens').value / lw.total_s:,.0f} tok/s")
+        if args.trace_out:
+            trace.tracer.export(args.trace_out)
+            print(f"trace: {len(trace.tracer.spans)} spans -> {args.trace_out}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,16 @@
+"""Tracing + metrics for the reconfigurable-dispatch stack.
+
+``trace``   — span recorder (nesting, JSON export, zero-overhead disabled);
+``metrics`` — counters and rolling latency percentiles for the loops;
+``report``  — planned-vs-measured reconciliation (paper Table II mirror).
+"""
+from . import metrics, report, trace
+from .metrics import Counter, LatencyWindow, MetricsRegistry
+from .report import ReconRow, format_table, reconcile, totals
+from .trace import Span, Tracer, capture, span, tracer
+
+__all__ = [
+    "Counter", "LatencyWindow", "MetricsRegistry", "ReconRow", "Span",
+    "Tracer", "capture", "format_table", "metrics", "reconcile", "report",
+    "span", "totals", "trace", "tracer",
+]

@@ -1,0 +1,104 @@
+"""Counters and rolling latency percentiles for the serving/training loops.
+
+Spans (``trace.py``) answer "what did this one dispatch cost"; metrics answer
+"what is the loop doing over time" — requests admitted, tokens generated,
+step-latency p50/p95/p99.  Both sides stay dependency-free (stdlib only) so
+they can run inside the train step callback and the serving scheduler without
+perturbing what they measure.
+"""
+from __future__ import annotations
+
+import bisect
+from collections import deque
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Counter:
+    name: str
+    value: float = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        self.value += n
+
+
+class LatencyWindow:
+    """Rolling window of the last ``maxlen`` latencies with percentile reads.
+
+    Keeps a parallel sorted list (insort/remove are O(window) on a few
+    thousand floats — negligible next to the steps being timed) so
+    ``percentile`` is O(1) and exact over the window, not an estimate.
+    """
+
+    def __init__(self, name: str, maxlen: int = 2048):
+        self.name = name
+        self.maxlen = maxlen
+        self._window: deque[float] = deque()
+        self._sorted: list[float] = []
+        self.count = 0          # lifetime observations, not just the window
+        self.total_s = 0.0      # lifetime sum
+
+    def observe(self, seconds: float) -> None:
+        self.count += 1
+        self.total_s += seconds
+        self._window.append(seconds)
+        bisect.insort(self._sorted, seconds)
+        if len(self._window) > self.maxlen:
+            old = self._window.popleft()
+            del self._sorted[bisect.bisect_left(self._sorted, old)]
+
+    def percentile(self, p: float) -> float:
+        """Exact percentile over the current window (p in [0, 100])."""
+        if not self._sorted:
+            return 0.0
+        idx = min(len(self._sorted) - 1,
+                  max(0, round(p / 100.0 * (len(self._sorted) - 1))))
+        return self._sorted[idx]
+
+    @property
+    def mean_s(self) -> float:
+        return self.total_s / self.count if self.count else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "count": self.count,
+            "mean_ms": self.mean_s * 1e3,
+            "p50_ms": self.percentile(50) * 1e3,
+            "p90_ms": self.percentile(90) * 1e3,
+            "p99_ms": self.percentile(99) * 1e3,
+        }
+
+    def format(self) -> str:
+        s = self.summary()
+        return (f"{self.name}: n={s['count']} mean={s['mean_ms']:.1f}ms "
+                f"p50={s['p50_ms']:.1f}ms p90={s['p90_ms']:.1f}ms "
+                f"p99={s['p99_ms']:.1f}ms")
+
+
+@dataclass
+class MetricsRegistry:
+    """Named counters + latency windows; one per loop (trainer, batcher)."""
+
+    counters: dict[str, Counter] = field(default_factory=dict)
+    latencies: dict[str, LatencyWindow] = field(default_factory=dict)
+
+    def counter(self, name: str) -> Counter:
+        if name not in self.counters:
+            self.counters[name] = Counter(name)
+        return self.counters[name]
+
+    def latency(self, name: str, maxlen: int = 2048) -> LatencyWindow:
+        if name not in self.latencies:
+            self.latencies[name] = LatencyWindow(name, maxlen)
+        return self.latencies[name]
+
+    def snapshot(self) -> dict:
+        return {
+            "counters": {k: c.value for k, c in self.counters.items()},
+            "latencies": {k: lw.summary() for k, lw in self.latencies.items()},
+        }
+
+    def format(self) -> str:
+        lines = [f"{k}={c.value:g}" for k, c in sorted(self.counters.items())]
+        lines += [lw.format() for _, lw in sorted(self.latencies.items())]
+        return "\n".join(lines)

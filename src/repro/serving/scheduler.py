@@ -14,6 +14,7 @@ of elasticity).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 
 import jax
@@ -21,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.models import decode_step, init_cache, lm
 from repro.models.config import ModelConfig
+from repro.observability import MetricsRegistry
 
 
 @dataclass
@@ -44,6 +46,9 @@ class ContinuousBatcher:
         self.slot_req: list[Request | None] = [None] * batch_slots
         self.queue: list[Request] = []
         self.completed: list[Request] = []
+        # per-batcher telemetry: admission/completion counters + rolling
+        # prefill and decode-step latency percentiles
+        self.metrics = MetricsRegistry()
 
     # ------------------------------ admission --------------------------------
     def submit(self, req: Request):
@@ -51,6 +56,7 @@ class ContinuousBatcher:
 
     def _admit(self, slot: int, req: Request):
         """Prefill the request into its slot's cache region."""
+        t0 = time.perf_counter()
         t = req.prompt.shape[0]
         batch = {"tokens": req.prompt[None]}
         logits, cache1 = lm.prefill(self.cfg, self.params, batch,
@@ -63,6 +69,9 @@ class ContinuousBatcher:
         first = int(jnp.argmax(logits[0, -1]))
         req.generated.append(first)
         self.slot_req[slot] = req
+        self.metrics.counter("requests_admitted").inc()
+        self.metrics.counter("prompt_tokens").inc(t)
+        self.metrics.latency("prefill").observe(time.perf_counter() - t0)
 
     def _fill_free_slots(self):
         for slot in range(self.b):
@@ -75,6 +84,7 @@ class ContinuousBatcher:
         self._fill_free_slots()
         if all(r is None for r in self.slot_req):
             return False
+        t0 = time.perf_counter()
         tokens = jnp.array(
             [[r.generated[-1] if r else 0] for r in self.slot_req],
             jnp.int32)
@@ -85,15 +95,22 @@ class ContinuousBatcher:
         self.pos = jnp.where(
             jnp.array([r is not None for r in self.slot_req]),
             self.pos + 1, self.pos)
+        active = 0
         for slot, req in enumerate(self.slot_req):
             if req is None:
                 continue
+            active += 1
             req.generated.append(int(nxt[slot]))
+            self.metrics.counter("tokens_generated").inc()
             if (len(req.generated) >= req.max_new_tokens
                     or int(self.pos[slot]) + 1 >= self.max_seq):
                 req.done = True
                 self.completed.append(req)
                 self.slot_req[slot] = None     # slot freed for admission
+                self.metrics.counter("requests_completed").inc()
+        self.metrics.counter("decode_steps").inc()
+        self.metrics.counter("active_slot_steps").inc(active)
+        self.metrics.latency("decode_step").observe(time.perf_counter() - t0)
         return True
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
@@ -103,3 +120,16 @@ class ContinuousBatcher:
                 break
             steps += 1
         return self.completed
+
+    def stats(self) -> dict:
+        """Counters + latency percentiles snapshot (JSON-serializable)."""
+        snap = self.metrics.snapshot()
+        dec = self.metrics.latencies.get("decode_step")
+        c = snap["counters"]
+        if dec and dec.total_s > 0:
+            # throughput over generated tokens (all active slots advance per step)
+            snap["tokens_per_s"] = c.get("tokens_generated", 0) / dec.total_s
+        slots = c.get("decode_steps", 0) * self.b
+        snap["slot_occupancy"] = (c.get("active_slot_steps", 0) / slots
+                                  if slots else 0.0)
+        return snap

@@ -1,55 +1,47 @@
-"""Property-based tests (hypothesis) over the CARLA analytic model."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+"""Property tests over the CARLA analytic model.
+
+``hypothesis`` is optional: when present, the invariants run as randomized
+property tests; without it, the same invariant checkers run over a
+deterministic grid that covers the corners of the original strategies
+(every IL/IC/K extreme, both 1x1 modes, odd/even partitions), so the
+properties are always exercised.
+"""
+import itertools
+
+import pytest
 
 from repro.core import layer_cost, select_dataflow
 from repro.core.cost_model import partitions_1x1, partitions_3x3
 from repro.core.modes import NUM_PES, U, ConvLayer, Dataflow
 
-conv3x3 = st.builds(
-    ConvLayer,
-    name=st.just("l"),
-    IL=st.sampled_from([7, 14, 28, 56, 112]),
-    IC=st.sampled_from([16, 64, 128, 256, 512]),
-    K=st.sampled_from([32, 64, 128, 512]),
-    FL=st.just(3), S=st.just(1), Z=st.just(1),
-)
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:          # deterministic fallback grid below still runs
+    HAVE_HYPOTHESIS = False
 
-conv1x1 = st.builds(
-    ConvLayer,
-    name=st.just("l"),
-    IL=st.sampled_from([7, 14, 28, 56]),
-    IC=st.sampled_from([16, 64, 256, 1024]),
-    K=st.sampled_from([32, 64, 256, 2048]),
-    FL=st.just(1), S=st.sampled_from([1, 2]), Z=st.just(0),
-)
-
-any_layer = st.one_of(conv3x3, conv1x1)
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed "
+    "(deterministic grid variants cover the same invariants)")
 
 
-@settings(max_examples=200, deadline=None)
-@given(any_layer)
-def test_puf_bounded(layer):
+# ------------------------ invariant checkers (shared) -------------------------
+def check_puf_bounded(layer):
     """PE utilization can never exceed 1 (Eq 5 invariant)."""
     c = layer_cost(layer)
     assert 0 < c.puf <= 1.0 + 1e-9
 
 
-@settings(max_examples=200, deadline=None)
-@given(any_layer)
-def test_dram_at_least_unique_data(layer):
+def check_dram_at_least_unique_data(layer):
     """DRAM accesses >= one fetch of every unique weight + output store."""
     c = layer_cost(layer)
-    unique_w = layer.FL ** 2 * layer.IC * layer.K
     out = layer.OL ** 2 * layer.K
-    assert c.dram_weights >= min(unique_w, c.dram_weights)  # sanity
     assert c.dram_out == out
     assert c.dram_in >= layer.OL ** 2 * layer.IC  # inputs touched at least once
 
 
-@settings(max_examples=100, deadline=None)
-@given(conv3x3)
-def test_cycles_linear_in_channels(layer):
+def check_cycles_linear_in_channels(layer):
     """Eq (2): cycles scale exactly linearly with IC."""
     c1 = layer_cost(layer).cycles
     doubled = ConvLayer(layer.name, layer.IL, layer.IC * 2, layer.K,
@@ -57,9 +49,7 @@ def test_cycles_linear_in_channels(layer):
     assert layer_cost(doubled).cycles == 2 * c1
 
 
-@settings(max_examples=100, deadline=None)
-@given(conv3x3)
-def test_cycles_step_in_filter_groups(layer):
+def check_cycles_step_in_filter_groups(layer):
     """Eq (2): cycles scale with ceil(K/U) — flat within a CU group."""
     c = layer_cost(layer)
     kg = -(-layer.K // U)
@@ -67,9 +57,7 @@ def test_cycles_step_in_filter_groups(layer):
     assert c.cycles == per_group * kg
 
 
-@settings(max_examples=100, deadline=None)
-@given(conv1x1)
-def test_1x1_mode_switch_consistent(layer):
+def check_1x1_mode_switch_consistent(layer):
     """The planner's mode choice matches the paper's feature-count rule."""
     df = select_dataflow(layer)
     if layer.OL ** 2 < NUM_PES:
@@ -78,9 +66,7 @@ def test_1x1_mode_switch_consistent(layer):
         assert df == Dataflow.CONV1X1_FEATURE_STATIONARY
 
 
-@settings(max_examples=100, deadline=None)
-@given(any_layer)
-def test_pruning_never_slower(layer):
+def check_pruning_never_slower(layer):
     """Halving K and IC (structured pruning) never increases any cost."""
     pruned = ConvLayer(layer.name, layer.IL, max(1, layer.IC // 2),
                        max(1, layer.K // 2), layer.FL, layer.S, layer.Z)
@@ -89,17 +75,120 @@ def test_pruning_never_slower(layer):
     assert cp.dram_total <= c.dram_total
 
 
-@settings(max_examples=50, deadline=None)
-@given(conv3x3)
-def test_partitions_match_sram(layer):
+def check_partitions_match_sram(layer):
     """Sub-out-fmaps respect the 224-word SRAM pair (paper §III.A)."""
     p = partitions_3x3(layer)
     rows_per_part = -(-layer.OL // p)
     assert rows_per_part * layer.OL <= 224 or layer.OL > 224
 
 
-@settings(max_examples=50, deadline=None)
-@given(conv1x1)
-def test_partitions_1x1_capacity(layer):
+def check_partitions_1x1_capacity(layer):
     p = partitions_1x1(layer)
     assert (p - 1) * NUM_PES < layer.OL ** 2 <= p * NUM_PES
+
+
+# ----------------------- deterministic fallback grid --------------------------
+# Corners + interior points of the hypothesis strategies below.
+GRID_3X3 = [
+    ConvLayer("g33", IL=il, IC=ic, K=k, FL=3, S=1, Z=1)
+    for il, ic, k in itertools.product(
+        [7, 14, 56, 112], [16, 64, 512], [32, 64, 512])
+]
+GRID_1X1 = [
+    ConvLayer("g11", IL=il, IC=ic, K=k, FL=1, S=s, Z=0)
+    for (il, ic, k), s in itertools.product(
+        itertools.product([7, 14, 28, 56], [16, 256, 1024], [32, 256, 2048]),
+        [1, 2])
+]
+GRID_ANY = GRID_3X3 + GRID_1X1
+
+
+@pytest.mark.parametrize("layer", GRID_ANY, ids=lambda l: repr(l)[:40])
+def test_grid_invariants_any_layer(layer):
+    check_puf_bounded(layer)
+    check_dram_at_least_unique_data(layer)
+    check_pruning_never_slower(layer)
+
+
+@pytest.mark.parametrize("layer", GRID_3X3, ids=lambda l: repr(l)[:40])
+def test_grid_invariants_3x3(layer):
+    check_cycles_linear_in_channels(layer)
+    check_cycles_step_in_filter_groups(layer)
+    check_partitions_match_sram(layer)
+
+
+@pytest.mark.parametrize("layer", GRID_1X1, ids=lambda l: repr(l)[:40])
+def test_grid_invariants_1x1(layer):
+    check_1x1_mode_switch_consistent(layer)
+    check_partitions_1x1_capacity(layer)
+
+
+# --------------------------- hypothesis variants ------------------------------
+if HAVE_HYPOTHESIS:
+    conv3x3 = st.builds(
+        ConvLayer,
+        name=st.just("l"),
+        IL=st.sampled_from([7, 14, 28, 56, 112]),
+        IC=st.sampled_from([16, 64, 128, 256, 512]),
+        K=st.sampled_from([32, 64, 128, 512]),
+        FL=st.just(3), S=st.just(1), Z=st.just(1),
+    )
+
+    conv1x1 = st.builds(
+        ConvLayer,
+        name=st.just("l"),
+        IL=st.sampled_from([7, 14, 28, 56]),
+        IC=st.sampled_from([16, 64, 256, 1024]),
+        K=st.sampled_from([32, 64, 256, 2048]),
+        FL=st.just(1), S=st.sampled_from([1, 2]), Z=st.just(0),
+    )
+
+    any_layer = st.one_of(conv3x3, conv1x1)
+
+    @needs_hypothesis
+    @settings(max_examples=200, deadline=None)
+    @given(any_layer)
+    def test_puf_bounded(layer):
+        check_puf_bounded(layer)
+
+    @needs_hypothesis
+    @settings(max_examples=200, deadline=None)
+    @given(any_layer)
+    def test_dram_at_least_unique_data(layer):
+        check_dram_at_least_unique_data(layer)
+
+    @needs_hypothesis
+    @settings(max_examples=100, deadline=None)
+    @given(conv3x3)
+    def test_cycles_linear_in_channels(layer):
+        check_cycles_linear_in_channels(layer)
+
+    @needs_hypothesis
+    @settings(max_examples=100, deadline=None)
+    @given(conv3x3)
+    def test_cycles_step_in_filter_groups(layer):
+        check_cycles_step_in_filter_groups(layer)
+
+    @needs_hypothesis
+    @settings(max_examples=100, deadline=None)
+    @given(conv1x1)
+    def test_1x1_mode_switch_consistent(layer):
+        check_1x1_mode_switch_consistent(layer)
+
+    @needs_hypothesis
+    @settings(max_examples=100, deadline=None)
+    @given(any_layer)
+    def test_pruning_never_slower(layer):
+        check_pruning_never_slower(layer)
+
+    @needs_hypothesis
+    @settings(max_examples=50, deadline=None)
+    @given(conv3x3)
+    def test_partitions_match_sram(layer):
+        check_partitions_match_sram(layer)
+
+    @needs_hypothesis
+    @settings(max_examples=50, deadline=None)
+    @given(conv1x1)
+    def test_partitions_1x1_capacity(layer):
+        check_partitions_1x1_capacity(layer)

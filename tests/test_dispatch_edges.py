@@ -1,0 +1,90 @@
+"""Dataflow-planner edge cases: large filters, the 1x1 stationarity boundary,
+strided 1x1 dispatch, and the 2-D weight convenience path of carla_conv."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import carla_conv, plan_conv, select_dataflow
+from repro.core.cost_model import layer_cost
+from repro.core.modes import NUM_PES, ConvLayer, Dataflow
+
+
+# ----------------------- select_dataflow: FL = 5 / 7 --------------------------
+@pytest.mark.parametrize("fl,z", [(5, 2), (7, 3)])
+def test_large_filters_row_decompose(fl, z):
+    layer = ConvLayer("big", IL=56, IC=16, K=32, FL=fl, S=1, Z=z)
+    assert select_dataflow(layer) == Dataflow.CONV7X7_ROW_DECOMPOSED
+    # the decomposed cost model must still produce a sane, bounded PUF
+    c = layer_cost(layer)
+    assert 0 < c.puf <= 1.0 + 1e-9
+    assert c.dram_out == layer.OL ** 2 * layer.K
+
+
+def test_resnet_conv1_is_row_decomposed():
+    conv1 = ConvLayer("conv1", IL=224, IC=3, K=64, FL=7, S=2, Z=3)
+    assert select_dataflow(conv1) == Dataflow.CONV7X7_ROW_DECOMPOSED
+
+
+# ------------------- 1x1 weight-stationary boundary ---------------------------
+def test_1x1_boundary_exactly_num_pes():
+    """OL*OL == NUM_PES (14*14 == 196): 'close to or greater' -> features stay
+    resident; strictly below flips to weight-stationary."""
+    at = ConvLayer("b", IL=14, IC=64, K=128, FL=1)
+    assert at.OL * at.OL == NUM_PES
+    assert select_dataflow(at) == Dataflow.CONV1X1_FEATURE_STATIONARY
+
+    below = ConvLayer("b", IL=13, IC=64, K=128, FL=1)
+    assert below.OL * below.OL < NUM_PES
+    assert select_dataflow(below) == Dataflow.CONV1X1_WEIGHT_STATIONARY
+
+
+def test_1x1_stride_crosses_boundary():
+    """Stride-2 shrinks OL: a 14x14 input (feature-stationary at stride 1)
+    becomes 7x7 = 49 features < 196 PEs -> weight-stationary."""
+    strided = ConvLayer("s", IL=14, IC=64, K=128, FL=1, S=2)
+    assert strided.OL == 7
+    assert select_dataflow(strided) == Dataflow.CONV1X1_WEIGHT_STATIONARY
+
+
+# --------------------- carla_conv numeric edge paths --------------------------
+def _ref_1x1(x, w2d, stride):
+    return jnp.einsum("bhwc,ck->bhwk", x[:, ::stride, ::stride, :], w2d)
+
+
+def test_carla_conv_stride2_1x1():
+    """The transition-block 1x1/2 (original ResNet variant) — subsampling
+    happens before the GEMM, and the result matches the dense reference."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 14, 14, 32))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 32, 64))
+    plan = plan_conv(x.shape, w.shape, stride=2)
+    assert plan.dataflow == Dataflow.CONV1X1_WEIGHT_STATIONARY
+    got = carla_conv(x, w, stride=2)
+    want = _ref_1x1(x, w[0, 0], 2)
+    assert got.shape == (2, 7, 7, 64)
+    assert float(jnp.max(jnp.abs(got - want))) < 1e-4
+
+
+def test_carla_conv_2d_weight_reshape_path():
+    """(C, K) weights are promoted to (1, 1, C, K) — both spellings must hit
+    the same 1x1 dispatch and produce identical outputs."""
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (1, 28, 28, 16))
+    w2d = jax.random.normal(jax.random.fold_in(key, 1), (16, 24))
+    got2d = carla_conv(x, w2d)
+    got4d = carla_conv(x, w2d[None, None])
+    assert got2d.shape == (1, 28, 28, 24)
+    assert jnp.array_equal(got2d, got4d)
+    assert float(jnp.max(jnp.abs(got2d - _ref_1x1(x, w2d, 1)))) < 1e-4
+
+
+def test_carla_conv_3x3_matches_reference():
+    """The serial-accumulation dispatch stays numerically a plain conv."""
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (1, 8, 8, 4))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (3, 3, 4, 8))
+    got = carla_conv(x, w, stride=1, padding=1)
+    want = jax.lax.conv_general_dilated(
+        x, w, (1, 1), [(1, 1), (1, 1)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    assert float(jnp.max(jnp.abs(got - want))) < 1e-4

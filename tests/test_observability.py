@@ -1,0 +1,166 @@
+"""Telemetry-layer tests: span nesting/summation, zero-overhead disabled mode,
+JSON round-trip, metrics percentiles, and the analytic-cost contract between
+``carla_conv`` spans and ``core.cost_model.layer_cost``."""
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import carla_conv, layer_cost
+from repro.core.networks import resnet50_conv_layers
+from repro.observability import (
+    LatencyWindow,
+    MetricsRegistry,
+    reconcile,
+    totals,
+    trace,
+)
+
+
+@pytest.fixture(autouse=True)
+def _clean_tracer():
+    trace.disable()
+    trace.clear()
+    yield
+    trace.disable()
+    trace.clear()
+
+
+# ------------------------------- spans ----------------------------------------
+def test_spans_nest_and_sum():
+    trace.enable()
+    with trace.span("outer") as outer:
+        with trace.span("inner", flops=100):
+            time.sleep(0.002)
+        with trace.span("inner", flops=50):
+            pass
+    assert len(trace.tracer.spans) == 1          # one root
+    root = trace.tracer.spans[0]
+    assert [c.name for c in root.children] == ["inner", "inner"]
+    # attr sums aggregate over the subtree; durations nest consistently
+    assert root.total("flops") == 150
+    assert root.duration_s >= sum(c.duration_s for c in root.children) > 0
+    assert root.self_time_s() >= 0
+
+
+def test_disabled_mode_records_nothing():
+    assert not trace.enabled()
+    with trace.span("ghost") as sp:
+        assert sp is None
+    x = jnp.ones((1, 8, 8, 4))
+    w = jnp.ones((3, 3, 4, 8))
+    carla_conv(x, w, padding=1)
+    assert trace.tracer.spans == []
+
+
+def test_json_roundtrip_exact():
+    trace.enable()
+    with trace.span("a", mode="3x3", n=7):
+        with trace.span("b", nested=True):
+            pass
+    payload = trace.tracer.to_json()
+    restored = trace.tracer.from_json(payload)
+    assert [s.to_dict() for s in restored] == \
+        [s.to_dict() for s in trace.tracer.spans]
+    assert restored[0].children[0].attrs == {"nested": True}
+
+
+def test_capture_restores_prior_state():
+    assert not trace.enabled()
+    with trace.capture() as tr:
+        assert trace.enabled()
+        with trace.span("x"):
+            pass
+    assert not trace.enabled()
+    assert len(tr.spans) == 1
+
+
+# ------------------- carla_conv spans vs the analytic model -------------------
+def test_carla_span_analytic_cost_matches_layer_cost_exactly():
+    """A ResNet-50 layer dispatched through carla_conv must record exactly
+    the LayerCost numbers the analytic model computes for that layer."""
+    layer = resnet50_conv_layers()[1]            # conv2_b0_1x1a, 56x56x64->64
+    cost = layer_cost(layer)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (1, layer.IL, layer.IL, layer.IC))
+    w = jax.random.normal(key, (layer.FL, layer.FL, layer.IC, layer.K))
+    with trace.capture() as tr:
+        carla_conv(x, w, stride=layer.S, padding=layer.Z, name=layer.name)
+    (sp,) = tr.spans
+    assert sp.name == "carla_conv"
+    assert sp.attrs["layer"] == layer.name
+    assert sp.attrs["dataflow"] == cost.dataflow.value
+    assert sp.attrs["analytic_cycles"] == cost.cycles
+    assert sp.attrs["analytic_dram_bytes"] == cost.dram_bytes
+    assert sp.attrs["analytic_puf"] == cost.puf
+    assert sp.attrs["analytic_time_ms"] == cost.time_s * 1e3
+    assert sp.attrs["macs"] == layer.macs
+    # the kernel it dispatched to is recorded as a child span
+    assert len(sp.children) == 1
+    assert sp.children[0].name.startswith("kernels.")
+    assert sp.duration_s >= sp.children[0].duration_s
+
+
+def test_reconcile_builds_rows_and_totals():
+    x = jnp.ones((2, 14, 14, 16))
+    with trace.capture() as tr:
+        carla_conv(x, jnp.ones((3, 3, 16, 32)), padding=1, name="l33")
+        carla_conv(x, jnp.ones((16, 32)), name="l11")
+    rows = reconcile(tr.spans)
+    assert [r.layer for r in rows] == ["l33", "l11"]
+    assert all(r.batch == 2 for r in rows)
+    assert all(r.measured_ms > 0 and r.achieved_gflops > 0 for r in rows)
+    assert max(r.measured_util for r in rows) == pytest.approx(1.0)
+    t = totals(rows)
+    assert t["layers"] == 2
+    assert t["analytic_ms"] == pytest.approx(sum(r.analytic_ms for r in rows))
+
+
+# ------------------------------- metrics --------------------------------------
+def test_latency_window_percentiles_exact():
+    lw = LatencyWindow("step", maxlen=100)
+    for v in range(1, 101):                      # 1..100 ms
+        lw.observe(v / 1e3)
+    assert lw.percentile(50) == pytest.approx(0.0505, abs=1e-3)
+    assert lw.percentile(0) == pytest.approx(0.001)
+    assert lw.percentile(100) == pytest.approx(0.100)
+    # rolling: pushing 50 more evicts the oldest 50
+    for v in range(101, 151):
+        lw.observe(v / 1e3)
+    assert lw.percentile(0) == pytest.approx(0.051)
+    assert lw.count == 150                       # lifetime count keeps going
+
+
+def test_metrics_registry_snapshot():
+    m = MetricsRegistry()
+    m.counter("tokens").inc(64)
+    m.counter("tokens").inc(64)
+    m.latency("step").observe(0.010)
+    snap = m.snapshot()
+    assert snap["counters"]["tokens"] == 128
+    assert snap["latencies"]["step"]["count"] == 1
+    assert snap["latencies"]["step"]["p50_ms"] == pytest.approx(10.0)
+
+
+def test_scheduler_exposes_metrics():
+    """The continuous batcher counts admissions/tokens and times steps."""
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.serving.scheduler import ContinuousBatcher, Request
+
+    cfg = get_config("smollm-135m", smoke=True)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    b = ContinuousBatcher(cfg, params, batch_slots=2, max_seq=32)
+    prompt = jnp.arange(4, dtype=jnp.int32)
+    b.submit(Request(0, prompt, max_new_tokens=3))
+    b.submit(Request(1, prompt, max_new_tokens=3))
+    done = b.run()
+    assert len(done) == 2
+    stats = b.stats()
+    assert stats["counters"]["requests_admitted"] == 2
+    assert stats["counters"]["requests_completed"] == 2
+    assert stats["counters"]["tokens_generated"] >= 4
+    assert stats["latencies"]["decode_step"]["count"] >= 2
+    assert stats["tokens_per_s"] > 0
+    assert 0 < stats["slot_occupancy"] <= 1

@@ -118,6 +118,21 @@ def test_checkpoint_roundtrip(tmp_path):
     assert got["b"]["c"].dtype == jnp.bfloat16
 
 
+def test_checkpoint_codec_tagged(tmp_path):
+    """The compression codec is recorded in the manifest + shard extension;
+    the zlib codec works with no optional deps installed."""
+    import msgpack
+    from repro.checkpoint import checkpoint as ckpt_mod
+
+    tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+    final = ckpt_mod.save(str(tmp_path), 1, tree, codec="zlib")
+    with open(os.path.join(final, "manifest.msgpack"), "rb") as f:
+        assert msgpack.unpackb(f.read())["codec"] == "zlib"
+    assert os.path.exists(os.path.join(final, "shard_00000.msgpack.zlib"))
+    got, _ = ckpt.restore(str(tmp_path), 1, tree)
+    assert np.array_equal(np.asarray(got["w"]), np.arange(8, dtype=np.float32))
+
+
 def test_checkpoint_atomic_no_partial(tmp_path):
     tree = {"w": jnp.zeros((8,))}
     ckpt.save(str(tmp_path), 1, tree)
