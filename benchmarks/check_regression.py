@@ -1,0 +1,151 @@
+"""Perf-regression gate: compare a bench run against the committed baseline.
+
+The baseline (``BENCH_7.json``, written by ``benchmarks/run.py
+--bench-json``) records per-layer measured wall ms, achieved GFLOP/s, and
+utilization for the ResNet-50/VGG-16 layer sets.  This CLI re-measures the
+same layer sets (or loads a second record via ``--candidate``) and exits
+nonzero when any layer, or a network total, slows past the tolerance band —
+so CI can gate merges on measured performance, not just correctness.
+
+  PYTHONPATH=src python -m benchmarks.check_regression              # fresh run
+  PYTHONPATH=src python -m benchmarks.check_regression \
+      --candidate other.json --tolerance 0.25
+  PYTHONPATH=src python -m benchmarks.check_regression --smoke      # CI mode
+
+Wall clocks are noisy, so the gate is deliberately one-sided and banded:
+a layer regresses only when ``cand_ms > base_ms * (1 + tolerance)``; getting
+faster never fails.  Totals use a tighter band (noise averages out).
+``--inject-slowdown F`` multiplies the candidate's measured times by ``F``
+before comparing — the self-test hook that proves the gate trips.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_BASELINE = os.path.join(REPO_ROOT, "BENCH_7.json")
+
+LAYER_TOL = 0.75     # per-layer band: single-layer walls are the noisiest
+TOTAL_TOL = 0.35     # network-total band
+UTIL_TOL = 0.50      # relative drop allowed in mean util-vs-peak
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        rec = json.load(f)
+    if "networks" not in rec:
+        raise SystemExit(f"{path}: not a BENCH record (no 'networks' key)")
+    return rec
+
+
+def inject_slowdown(record: dict, factor: float) -> dict:
+    """Scale every measured time by ``factor`` (gate self-test hook)."""
+    rec = json.loads(json.dumps(record))
+    for net in rec["networks"].values():
+        net["total_measured_ms"] *= factor
+        for layer in net["layers"]:
+            layer["measured_ms"] *= factor
+            layer["gflops"] /= factor
+    return rec
+
+
+def compare(base: dict, cand: dict, *, layer_tol: float = LAYER_TOL,
+            total_tol: float = TOTAL_TOL,
+            util_tol: float = UTIL_TOL) -> list[str]:
+    """Return a list of regression descriptions (empty = gate passes)."""
+    problems: list[str] = []
+    for net, b in base["networks"].items():
+        c = cand["networks"].get(net)
+        if c is None:
+            problems.append(f"{net}: missing from candidate record")
+            continue
+        bt, ct = b["total_measured_ms"], c["total_measured_ms"]
+        if ct > bt * (1 + total_tol):
+            problems.append(
+                f"{net}: total {ct:.1f} ms vs baseline {bt:.1f} ms "
+                f"(+{(ct / bt - 1) * 100:.0f}% > {total_tol * 100:.0f}%)")
+        cl = {layer["layer"]: layer for layer in c["layers"]}
+        for bl in b["layers"]:
+            l = cl.get(bl["layer"])
+            if l is None:
+                problems.append(f"{net}/{bl['layer']}: missing layer")
+                continue
+            if l["dataflow"] != bl["dataflow"]:
+                problems.append(
+                    f"{net}/{bl['layer']}: dataflow changed "
+                    f"{bl['dataflow']} -> {l['dataflow']}")
+            if l["measured_ms"] > bl["measured_ms"] * (1 + layer_tol):
+                problems.append(
+                    f"{net}/{bl['layer']}: {l['measured_ms']:.2f} ms vs "
+                    f"baseline {bl['measured_ms']:.2f} ms "
+                    f"(+{(l['measured_ms'] / bl['measured_ms'] - 1) * 100:.0f}%"
+                    f" > {layer_tol * 100:.0f}%)")
+        b_util = sum(x["util_vs_peak"] for x in b["layers"]) / len(b["layers"])
+        c_util = sum(x["util_vs_peak"] for x in c["layers"]) / len(c["layers"])
+        if b_util > 0 and c_util < b_util * (1 - util_tol):
+            problems.append(
+                f"{net}: mean util {c_util:.2f} vs baseline {b_util:.2f} "
+                f"(-{(1 - c_util / b_util) * 100:.0f}% > {util_tol * 100:.0f}%)")
+    return problems
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--candidate", default=None,
+                    help="a BENCH json to compare; omit to measure fresh")
+    ap.add_argument("--tolerance", type=float, default=LAYER_TOL,
+                    help="per-layer relative slowdown band")
+    ap.add_argument("--total-tolerance", type=float, default=TOTAL_TOL)
+    ap.add_argument("--util-tolerance", type=float, default=UTIL_TOL)
+    ap.add_argument("--inject-slowdown", type=float, default=1.0,
+                    help="scale candidate times by this factor (self-test)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fresh measurement uses the tiny smoke layer set")
+    ap.add_argument("--reps", type=int, default=0,
+                    help="traced reps for a fresh run (0 = baseline's reps)")
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    if args.candidate:
+        cand = load(args.candidate)
+    else:
+        from .telemetry_report import collect_bench
+        smoke = args.smoke or base.get("smoke", False)
+        nets = (["smoke"] if smoke else list(base["networks"]))
+        reps = args.reps or base.get("reps", 2)
+        print(f"measuring {'/'.join(nets)} fresh "
+              f"(reps={reps}, impl={base.get('impl', 'auto')})...")
+        cand = collect_bench(nets, batch=base.get("batch", 1), reps=reps,
+                             impl=base.get("impl", "auto"), smoke=smoke)
+    if args.inject_slowdown != 1.0:
+        cand = inject_slowdown(cand, args.inject_slowdown)
+        print(f"(injected {args.inject_slowdown}x slowdown into candidate)")
+
+    if base.get("backend") != cand.get("backend"):
+        print(f"WARNING: backend mismatch — baseline "
+              f"{base.get('backend')} vs candidate {cand.get('backend')}; "
+              "wall-time comparison is between different machines")
+
+    problems = compare(base, cand, layer_tol=args.tolerance,
+                       total_tol=args.total_tolerance,
+                       util_tol=args.util_tolerance)
+    for net, b in sorted(base["networks"].items()):
+        c = cand["networks"].get(net)
+        if c:
+            print(f"{net}: baseline {b['total_measured_ms']:.1f} ms -> "
+                  f"candidate {c['total_measured_ms']:.1f} ms "
+                  f"({len(b['layers'])} layers)")
+    if problems:
+        print(f"\nPERF REGRESSION ({len(problems)}):")
+        for p in problems:
+            print(f"  - {p}")
+        sys.exit(1)
+    print("\nperf gate: PASS (no regression beyond tolerance)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,18 @@
 """Benchmark driver: one table per paper figure + kernel bench + roofline.
 
 Run:  PYTHONPATH=src python -m benchmarks.run  [--skip-kernels]
+          [--smoke] [--bench-json BENCH_7.json]
+
+``--bench-json`` measures the ResNet-50/VGG-16 layer sets through the traced
+``carla_conv`` path and writes the per-layer measured ms / GFLOP/s /
+utilization record that ``benchmarks/check_regression.py`` gates against.
+``--smoke`` keeps everything in seconds: analytic tables + fidelity gate
+only, and the bench record (if requested) uses the tiny smoke layer set.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 
@@ -25,6 +33,14 @@ def _print_table(title, headers, rows, max_rows=60):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-kernels", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="analytic tables + fidelity gate only (seconds); "
+                         "--bench-json uses the tiny smoke layer set")
+    ap.add_argument("--bench-json", default=None,
+                    help="measure the conv layer sets and write the "
+                         "BENCH_*.json perf baseline here")
+    ap.add_argument("--bench-reps", type=int, default=2,
+                    help="traced reps per layer for --bench-json (best kept)")
     args = ap.parse_args()
 
     from . import paper_figures
@@ -52,15 +68,28 @@ def main() -> None:
         print(f"{status} {name:16s} got {got:8.2f}  paper {want:8.2f}  "
               f"delta {rel * 100:5.2f}% (tol {tol * 100:.1f}%)")
 
-    if not args.skip_kernels:
+    if not args.skip_kernels and not args.smoke:
         from .kernel_bench import kernel_table
         _print_table(*kernel_table())
 
-    from .roofline import roofline_table
-    for mesh in ("single", "multi"):
-        title, headers, rows = roofline_table(mesh)
-        if rows:
-            _print_table(title, headers, rows)
+    if not args.smoke:
+        from .roofline import roofline_table
+        for mesh in ("single", "multi"):
+            title, headers, rows = roofline_table(mesh)
+            if rows:
+                _print_table(title, headers, rows)
+
+    if args.bench_json:
+        from .telemetry_report import collect_bench
+        nets = ["smoke"] if args.smoke else ["resnet50", "vgg16"]
+        reps = 1 if args.smoke else args.bench_reps
+        record = collect_bench(nets, reps=reps, smoke=args.smoke)
+        with open(args.bench_json, "w") as f:
+            json.dump(record, f, indent=2)
+            f.write("\n")
+        n_layers = sum(len(v["layers"]) for v in record["networks"].values())
+        print(f"\nbench record: {n_layers} layers over "
+              f"{'/'.join(record['networks'])} -> {args.bench_json}")
 
     if not ok:
         sys.exit(1)

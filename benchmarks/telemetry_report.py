@@ -9,10 +9,21 @@ Runs every conv layer of ResNet-50 (and VGG-16 with --net vgg16) through
 
 Run:  PYTHONPATH=src python -m benchmarks.telemetry_report [--net resnet50]
           [--batch 1] [--reps 3] [--limit N] [--json out.json]
+          [--chrome out.trace.json] [--smoke]
+
+``--smoke`` swaps in the tiny ``smoke_conv_layers`` set (one layer per
+dataflow, reps=1, overhead check skipped) so CI can keep this CLI alive in
+seconds.  ``--chrome`` additionally exports the captured spans in Chrome
+``trace_event`` format (open at https://ui.perfetto.dev).
 
 Also measures the tracing-disabled dispatch overhead (the acceptance gate for
 the zero-overhead requirement): the same dispatch with tracing off must cost
 the same as calling the jitted kernel directly.
+
+``collect_bench`` is the shared measurement core behind the perf-regression
+gate: ``benchmarks/run.py --bench-json`` writes its output as the committed
+``BENCH_*.json`` baseline and ``benchmarks/check_regression.py`` compares a
+fresh run against it.
 """
 from __future__ import annotations
 
@@ -23,8 +34,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import carla_conv
-from repro.core.networks import resnet50_conv_layers, vgg16_conv_layers
+from repro.core.networks import (
+    resnet50_conv_layers,
+    smoke_conv_layers,
+    vgg16_conv_layers,
+)
 from repro.observability import format_table, reconcile, totals, trace
+
+NET_LAYERS = {
+    "resnet50": resnet50_conv_layers,
+    "vgg16": vgg16_conv_layers,
+    "smoke": smoke_conv_layers,
+}
 
 
 def _layer_operands(layer, batch: int, key):
@@ -46,13 +67,52 @@ def run_network(layers, batch: int, reps: int, impl: str = "auto"):
         kw = dict(stride=layer.S, padding=layer.Z, impl=impl, name=layer.name)
         jax.block_until_ready(carla_conv(x, w, **kw))        # warm/compile
         for _ in range(reps):
-            with trace.capture():
+            with trace.capture() as tr:
                 carla_conv(x, w, **kw)
-            (sp,) = trace.tracer.spans
+            (sp,) = tr.spans
             prev = best.get(layer.name)
             if prev is None or sp.duration_s < prev.duration_s:
                 best[layer.name] = sp
     return [best[layer.name] for layer in layers]
+
+
+def collect_bench(nets: list[str], batch: int = 1, reps: int = 2,
+                  impl: str = "auto", smoke: bool = False) -> dict:
+    """Measure the given layer sets and return the BENCH_*.json record.
+
+    Per layer: measured wall ms (best of ``reps``), achieved GFLOP/s,
+    utilization vs the run's peak, plus the analytic side (ASIC ms, PUF) so
+    regressions in achieved-vs-analytic are visible, not just wall time.
+    """
+    record: dict = {
+        "version": 1,
+        "backend": jax.default_backend(),
+        "impl": impl,
+        "batch": batch,
+        "reps": reps,
+        "smoke": smoke,
+        "networks": {},
+    }
+    for net in nets:
+        layers = NET_LAYERS[net]()
+        spans = run_network(layers, batch, reps, impl)
+        rows = reconcile(spans)
+        t = totals(rows)
+        record["networks"][net] = {
+            "total_measured_ms": t["measured_ms_per_image"],
+            "total_analytic_ms": t["analytic_ms"],
+            "speed_ratio": t["speed_ratio"],
+            "layers": [{
+                "layer": r.layer,
+                "dataflow": r.dataflow,
+                "measured_ms": r.measured_ms,
+                "gflops": r.achieved_gflops,
+                "util_vs_peak": r.measured_util,
+                "analytic_ms": r.analytic_ms,
+                "analytic_puf": r.analytic_puf,
+            } for r in rows],
+        }
+    return record
 
 
 def measure_disabled_overhead(reps: int = 100,
@@ -97,17 +157,24 @@ def main() -> None:
                     help="backend peak for util%% (0 = best layer in run)")
     ap.add_argument("--json", default=None,
                     help="also export the raw span trace to this path")
+    ap.add_argument("--chrome", default=None,
+                    help="export a chrome://tracing / Perfetto trace here")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny layer set, 1 rep, no overhead check (seconds)")
     ap.add_argument("--skip-overhead", action="store_true")
     args = ap.parse_args()
 
-    layers = (resnet50_conv_layers() if args.net == "resnet50"
-              else vgg16_conv_layers())
+    if args.smoke:
+        net, reps, skip_overhead = "smoke", 1, True
+    else:
+        net, reps, skip_overhead = args.net, args.reps, args.skip_overhead
+    layers = NET_LAYERS[net]()
     if args.limit:
         layers = layers[:args.limit]
 
-    print(f"=== {args.net}: analytic (ASIC @200 MHz, batch-1) vs measured "
+    print(f"=== {net}: analytic (ASIC @200 MHz, batch-1) vs measured "
           f"({jax.default_backend()}, batch={args.batch}, impl={args.impl}) ===")
-    spans = run_network(layers, args.batch, args.reps, args.impl)
+    spans = run_network(layers, args.batch, reps, args.impl)
     rows = reconcile(spans, peak_gflops=args.peak_gflops or None)
     print(format_table(rows))
 
@@ -128,7 +195,12 @@ def main() -> None:
             _json.dump([s.to_dict() for s in spans], f, indent=2)
         print(f"trace -> {args.json}")
 
-    if not args.skip_overhead:
+    if args.chrome:
+        from repro.observability import export_chrome_trace
+        export_chrome_trace(spans, args.chrome)
+        print(f"chrome trace -> {args.chrome} (open in ui.perfetto.dev)")
+
+    if not skip_overhead:
         wrapped, raw = measure_disabled_overhead()
         delta = wrapped - raw
         print(f"\ndisabled-tracing overhead: instrumented {wrapped:.1f} us vs "

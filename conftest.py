@@ -17,6 +17,11 @@ OPTIONAL_DEPS = {
 }
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: subprocess/e2e tests (benchmark CLI liveness)")
+
+
 def pytest_report_header(config):
     lines = []
     for mod, consequence in sorted(OPTIONAL_DEPS.items()):

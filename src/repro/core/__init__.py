@@ -18,6 +18,7 @@ from .modes import (
 from .networks import (
     resnet50_conv_layers,
     resnet50_projection_shortcuts,
+    smoke_conv_layers,
     vgg16_conv_layers,
 )
 
@@ -25,5 +26,6 @@ __all__ = [
     "ConvLayer", "ConvPlan", "Dataflow", "LayerCost", "NetworkCost",
     "Stationarity", "carla_conv", "layer_cost", "network_cost", "plan_conv",
     "resnet50_conv_layers", "resnet50_projection_shortcuts", "resnet50_cost",
-    "select_dataflow", "select_stationarity", "vgg16_conv_layers", "vgg16_cost",
+    "select_dataflow", "select_stationarity", "smoke_conv_layers",
+    "vgg16_conv_layers", "vgg16_cost",
 ]

@@ -76,3 +76,18 @@ def vgg16_conv_layers() -> list[ConvLayer]:
         ConvLayer(f"vgg_L{i+1}_{k}-{ic}-{il}", IL=il, IC=ic, K=k, FL=3, S=1, Z=1)
         for i, (il, ic, k) in enumerate(spec)
     ]
+
+
+def smoke_conv_layers() -> list[ConvLayer]:
+    """Tiny layers covering every dataflow the controller can pick.
+
+    Shapes are chosen so the whole set compiles and runs in seconds on CPU;
+    benchmark CLIs use this for their ``--smoke`` mode (CI liveness, not
+    performance claims).
+    """
+    return [
+        ConvLayer("smoke_3x3", IL=14, IC=8, K=16, FL=3, S=1, Z=1),
+        ConvLayer("smoke_1x1_fs", IL=28, IC=16, K=8, FL=1),
+        ConvLayer("smoke_1x1_ws", IL=7, IC=16, K=8, FL=1),
+        ConvLayer("smoke_7x7", IL=28, IC=3, K=8, FL=7, S=2, Z=3),
+    ]

@@ -21,6 +21,8 @@ import threading
 
 import numpy as np
 
+from repro.observability import events
+
 
 class SyntheticTokenDataset:
     def __init__(self, vocab: int, seq_len: int, global_batch: int,
@@ -88,6 +90,9 @@ class PrefetchIterator:
                 i += 1
         except BaseException as e:  # noqa: BLE001 — surfaced to the consumer
             self._err = e
+            if events.enabled():
+                events.emit("data.worker_error", index=i,
+                            error=f"{type(e).__name__}: {e}")
 
     def __next__(self):
         while True:
@@ -107,3 +112,5 @@ class PrefetchIterator:
     def close(self):
         self._stop.set()
         self._thread.join(timeout=2.0)
+        if events.enabled():
+            events.emit("data.closed", index=self.index)

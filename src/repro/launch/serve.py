@@ -10,6 +10,7 @@ cells lower.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -19,7 +20,7 @@ from repro.configs import get_config
 from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_production_mesh, make_smoke_mesh, set_mesh
 from repro.models import lm
-from repro.observability import MetricsRegistry
+from repro.observability import MetricsExporter, MetricsRegistry, events
 
 
 def main():
@@ -31,7 +32,17 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--metrics-port", type=int,
+                    default=int(os.environ.get("REPRO_METRICS_PORT", "-1")),
+                    help="serve Prometheus /metrics on this port "
+                         "(0 = ephemeral, -1 = off; env REPRO_METRICS_PORT)")
+    ap.add_argument("--event-log",
+                    default=os.environ.get("REPRO_EVENT_LOG") or None,
+                    help="append structured JSONL events to this path "
+                         "(env REPRO_EVENT_LOG)")
     args = ap.parse_args()
+    if args.event_log:
+        events.install(args.event_log)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     mesh = (make_smoke_mesh() if args.mesh == "smoke" else
@@ -49,6 +60,11 @@ def main():
                 key, (args.batch, args.prompt_len), 0, cfg.vocab)}
 
         telemetry = MetricsRegistry()
+        exporter = None
+        if args.metrics_port >= 0:
+            exporter = MetricsExporter({"serve": telemetry},
+                                       port=args.metrics_port)
+            print(f"metrics: http://127.0.0.1:{exporter.start()}/metrics")
         t0 = time.time()
         logits, cache = lm.prefill(cfg, params, batch, max_seq=max_seq)
         next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
@@ -84,6 +100,10 @@ def main():
         if lw.count:
             print(lw.format())
         print("sample:", toks[0, :12].tolist())
+        if exporter is not None:
+            exporter.stop()
+        if args.event_log:
+            events.uninstall()
 
 
 if __name__ == "__main__":

@@ -10,6 +10,7 @@ configs (the step functions, shardings, and checkpoint layout are identical).
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -19,7 +20,13 @@ from repro.configs import get_config
 from repro.data import PrefetchIterator, SyntheticTokenDataset
 from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_production_mesh, make_smoke_mesh, set_mesh
-from repro.observability import MetricsRegistry, trace
+from repro.observability import (
+    MetricsExporter,
+    MetricsRegistry,
+    events,
+    export_chrome_trace,
+    trace,
+)
 from repro.runtime import TrainSupervisor
 
 
@@ -39,9 +46,21 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--trace-out", default=None,
                     help="export the span trace to this JSON path")
+    ap.add_argument("--trace-chrome", default=None,
+                    help="export a chrome://tracing / Perfetto trace here")
+    ap.add_argument("--metrics-port", type=int,
+                    default=int(os.environ.get("REPRO_METRICS_PORT", "-1")),
+                    help="serve Prometheus /metrics on this port "
+                         "(0 = ephemeral, -1 = off; env REPRO_METRICS_PORT)")
+    ap.add_argument("--event-log",
+                    default=os.environ.get("REPRO_EVENT_LOG") or None,
+                    help="append structured JSONL events to this path "
+                         "(env REPRO_EVENT_LOG)")
     args = ap.parse_args()
-    if args.trace_out:
+    if args.trace_out or args.trace_chrome:
         trace.enable()
+    if args.event_log:
+        events.install(args.event_log)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     mesh = (make_smoke_mesh() if args.mesh == "smoke" else
@@ -73,12 +92,19 @@ def main():
 
         t0 = time.time()
         telemetry = MetricsRegistry()
+        exporter = None
+        if args.metrics_port >= 0:
+            exporter = MetricsExporter({"train": telemetry},
+                                       port=args.metrics_port)
+            print(f"metrics: http://127.0.0.1:{exporter.start()}/metrics")
         tokens_per_step = args.batch * args.seq_len
 
         def metrics_cb(step, metrics, dt):
             telemetry.counter("steps").inc()
             telemetry.counter("tokens").inc(tokens_per_step)
             telemetry.latency("train_step").observe(dt)
+            telemetry.histogram("train_step_seconds").observe(dt)
+            telemetry.gauge("last_loss").set(float(metrics["loss"]))
             if step % 10 == 0 or step < 3:
                 print(f"step {step:5d}  loss {float(metrics['loss']):.4f}  "
                       f"{dt * 1e3:.0f} ms/step", flush=True)
@@ -96,6 +122,17 @@ def main():
         if args.trace_out:
             trace.tracer.export(args.trace_out)
             print(f"trace: {len(trace.tracer.spans)} spans -> {args.trace_out}")
+        if args.trace_chrome:
+            export_chrome_trace(trace.tracer.spans, args.trace_chrome)
+            print(f"chrome trace -> {args.trace_chrome} "
+                  "(open in ui.perfetto.dev)")
+        if exporter is not None:
+            exporter.stop()
+        if args.event_log:
+            log = events.get()
+            print(f"event log: {log.emitted if log else 0} events -> "
+                  f"{args.event_log}")
+            events.uninstall()
 
 
 if __name__ == "__main__":

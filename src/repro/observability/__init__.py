@@ -1,16 +1,23 @@
-"""Tracing + metrics for the reconfigurable-dispatch stack.
+"""Tracing + metrics + export for the reconfigurable-dispatch stack.
 
 ``trace``   — span recorder (nesting, JSON export, zero-overhead disabled);
-``metrics`` — counters and rolling latency percentiles for the loops;
-``report``  — planned-vs-measured reconciliation (paper Table II mirror).
+``metrics`` — counters/gauges/histograms and rolling latency percentiles;
+``report``  — planned-vs-measured reconciliation (paper Table II mirror);
+``export``  — Chrome/Perfetto ``trace_event`` JSON exporter;
+``prom``    — Prometheus text exposition + stdlib HTTP exporter;
+``events``  — structured JSONL event log for the control planes.
 """
-from . import metrics, report, trace
-from .metrics import Counter, LatencyWindow, MetricsRegistry
+from . import events, export, metrics, prom, report, trace
+from .export import export_chrome_trace, to_chrome_trace
+from .metrics import Counter, Gauge, Histogram, LatencyWindow, MetricsRegistry
+from .prom import MetricsExporter
 from .report import ReconRow, format_table, reconcile, totals
-from .trace import Span, Tracer, capture, span, tracer
+from .trace import Capture, Span, Tracer, capture, span, tracer
 
 __all__ = [
-    "Counter", "LatencyWindow", "MetricsRegistry", "ReconRow", "Span",
-    "Tracer", "capture", "format_table", "metrics", "reconcile", "report",
-    "span", "totals", "trace", "tracer",
+    "Capture", "Counter", "Gauge", "Histogram", "LatencyWindow",
+    "MetricsExporter", "MetricsRegistry", "ReconRow", "Span", "Tracer",
+    "capture", "events", "export", "export_chrome_trace", "format_table",
+    "metrics", "prom", "reconcile", "report", "span", "to_chrome_trace",
+    "totals", "trace", "tracer",
 ]

@@ -22,6 +22,69 @@ class Counter:
         self.value += n
 
 
+@dataclass
+class Gauge:
+    """A value that can go up and down (queue depth, active slots, ...)."""
+
+    name: str
+    value: float = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = v
+
+    def inc(self, n: float = 1.0) -> None:
+        self.value += n
+
+    def dec(self, n: float = 1.0) -> None:
+        self.value -= n
+
+
+# Default latency buckets (seconds): sub-ms kernel dispatches through
+# multi-second cold compiles.  Chosen once and fixed so exposition series
+# stay label-stable across runs.
+DEFAULT_BUCKETS = (0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1,
+                   0.25, 0.5, 1.0, 2.5, 5.0, 10.0)
+
+
+class Histogram:
+    """Fixed-bucket histogram (Prometheus semantics: cumulative buckets).
+
+    ``bucket_counts[i]`` counts observations <= ``buckets[i]`` (non-cumulative
+    storage; exposition renders the cumulative form plus the implicit +Inf
+    bucket).  ``sum``/``count`` are lifetime totals like ``LatencyWindow``'s.
+    """
+
+    def __init__(self, name: str, buckets: tuple[float, ...] = DEFAULT_BUCKETS):
+        self.name = name
+        self.buckets = tuple(sorted(buckets))
+        self.bucket_counts = [0] * len(self.buckets)
+        self.inf_count = 0
+        self.sum = 0.0
+        self.count = 0
+
+    def observe(self, value: float) -> None:
+        self.count += 1
+        self.sum += value
+        i = bisect.bisect_left(self.buckets, value)
+        if i < len(self.buckets):
+            self.bucket_counts[i] += 1
+        else:
+            self.inf_count += 1
+
+    def cumulative(self) -> list[tuple[float, int]]:
+        """[(upper_bound, cumulative_count), ...] ending with (inf, count)."""
+        out, running = [], 0
+        for ub, n in zip(self.buckets, self.bucket_counts):
+            running += n
+            out.append((ub, running))
+        out.append((float("inf"), self.count))
+        return out
+
+    def summary(self) -> dict:
+        return {"count": self.count, "sum": self.sum,
+                "buckets": {str(ub): c for ub, c in self.cumulative()}}
+
+
 class LatencyWindow:
     """Rolling window of the last ``maxlen`` latencies with percentile reads.
 
@@ -77,9 +140,11 @@ class LatencyWindow:
 
 @dataclass
 class MetricsRegistry:
-    """Named counters + latency windows; one per loop (trainer, batcher)."""
+    """Named counters/gauges/histograms + latency windows; one per loop."""
 
     counters: dict[str, Counter] = field(default_factory=dict)
+    gauges: dict[str, Gauge] = field(default_factory=dict)
+    histograms: dict[str, Histogram] = field(default_factory=dict)
     latencies: dict[str, LatencyWindow] = field(default_factory=dict)
 
     def counter(self, name: str) -> Counter:
@@ -87,18 +152,38 @@ class MetricsRegistry:
             self.counters[name] = Counter(name)
         return self.counters[name]
 
+    def gauge(self, name: str) -> Gauge:
+        if name not in self.gauges:
+            self.gauges[name] = Gauge(name)
+        return self.gauges[name]
+
+    def histogram(self, name: str,
+                  buckets: tuple[float, ...] = DEFAULT_BUCKETS) -> Histogram:
+        if name not in self.histograms:
+            self.histograms[name] = Histogram(name, buckets)
+        return self.histograms[name]
+
     def latency(self, name: str, maxlen: int = 2048) -> LatencyWindow:
         if name not in self.latencies:
             self.latencies[name] = LatencyWindow(name, maxlen)
         return self.latencies[name]
 
     def snapshot(self) -> dict:
-        return {
+        snap = {
             "counters": {k: c.value for k, c in self.counters.items()},
             "latencies": {k: lw.summary() for k, lw in self.latencies.items()},
         }
+        if self.gauges:
+            snap["gauges"] = {k: g.value for k, g in self.gauges.items()}
+        if self.histograms:
+            snap["histograms"] = {k: h.summary()
+                                  for k, h in self.histograms.items()}
+        return snap
 
     def format(self) -> str:
         lines = [f"{k}={c.value:g}" for k, c in sorted(self.counters.items())]
+        lines += [f"{k}={g.value:g}" for k, g in sorted(self.gauges.items())]
+        lines += [f"{k}: n={h.count} sum={h.sum:g}"
+                  for k, h in sorted(self.histograms.items())]
         lines += [lw.format() for _, lw in sorted(self.latencies.items())]
         return "\n".join(lines)

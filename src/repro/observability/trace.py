@@ -40,6 +40,7 @@ class Span:
     duration_s: float = 0.0
     attrs: dict[str, Any] = field(default_factory=dict)
     children: list["Span"] = field(default_factory=list)
+    tid: int = 0                 # OS thread ident at record time
 
     # ----------------------------- aggregation -------------------------------
     def walk(self) -> Iterator["Span"]:
@@ -64,6 +65,7 @@ class Span:
             "duration_s": self.duration_s,
             "attrs": self.attrs,
             "children": [c.to_dict() for c in self.children],
+            "tid": self.tid,
         }
 
     @classmethod
@@ -74,6 +76,7 @@ class Span:
             duration_s=d["duration_s"],
             attrs=dict(d["attrs"]),
             children=[cls.from_dict(c) for c in d["children"]],
+            tid=d.get("tid", 0),    # pre-exporter traces lack the field
         )
 
 
@@ -102,7 +105,7 @@ class Tracer:
         if not self.enabled:
             yield None
             return
-        sp = Span(name=name, attrs=attrs)
+        sp = Span(name=name, attrs=attrs, tid=threading.get_ident())
         stack = self._stack()
         stack.append(sp)
         t0 = time.perf_counter()
@@ -165,20 +168,45 @@ def span(name: str, **attrs):
     return tracer.span(name, **attrs)
 
 
+class Capture:
+    """Holds the root spans recorded inside one ``capture()`` block.
+
+    While the block is open, ``spans`` aliases the tracer's live list; on
+    exit it keeps the captured roots even though the tracer's previous
+    state (enabled flag AND previously collected spans) is restored.
+    """
+
+    def __init__(self) -> None:
+        self.spans: list[Span] = []
+
+    def find(self, name: str) -> list[Span]:
+        return [s for root in self.spans for s in root.walk()
+                if s.name == name]
+
+
 @contextmanager
 def capture():
     """Enable tracing for a block, restoring the previous state after.
 
-    Yields the global tracer (pre-cleared), so::
+    Yields a :class:`Capture` holding only the spans recorded inside the
+    block::
 
         with trace.capture() as tr:
             carla_conv(x, w)
         rows = report.reconcile(tr.spans)
+
+    The tracer's prior state — the enabled flag *and* any root spans
+    collected before the block — is saved and restored, so sequential or
+    nested captures never destroy earlier results.
     """
-    prev = tracer.enabled
-    tracer.clear()
+    prev_enabled = tracer.enabled
+    prev_spans = tracer.spans
+    cap = Capture()
+    tracer.spans = cap.spans        # collect into the capture, live
     tracer.enabled = True
     try:
-        yield tracer
+        yield cap
     finally:
-        tracer.enabled = prev
+        cap.spans = tracer.spans    # in case someone reassigned the list
+        tracer.spans = prev_spans
+        tracer.enabled = prev_enabled

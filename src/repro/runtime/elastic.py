@@ -15,6 +15,8 @@ from dataclasses import dataclass
 
 import jax
 
+from repro.observability import events
+
 
 def largest_pow2_leq(n: int) -> int:
     p = 1
@@ -45,7 +47,13 @@ def plan_remesh(old_shape: tuple, axis_names: tuple,
     assert new_data >= 1
     old_data = old_shape[-2]
     accum = max(1, old_data // new_data)
-    return ElasticPlan(old_shape, lead + (new_data, model), axis_names, accum)
+    plan = ElasticPlan(old_shape, lead + (new_data, model), axis_names, accum)
+    if events.enabled():
+        events.emit("elastic.remesh", old_shape=list(old_shape),
+                    new_shape=list(plan.new_shape),
+                    devices_available=devices_available,
+                    grad_accum_factor=accum)
+    return plan
 
 
 def build_mesh(plan: ElasticPlan):

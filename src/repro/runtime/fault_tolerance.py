@@ -23,6 +23,7 @@ import time
 from dataclasses import dataclass, field
 
 from repro import checkpoint as ckpt
+from repro.observability import events
 
 
 @dataclass
@@ -38,6 +39,9 @@ class StragglerDetector:
         if is_straggler:
             self.events.append({"step": step, "host": host, "dt": dt,
                                 "ewma": self.ewma})
+            if events.enabled():
+                events.emit("fault.straggler", step=step, host=host,
+                            dt_s=dt, ewma_s=self.ewma)
         self.ewma = dt if self.ewma is None else \
             (1 - self.alpha) * self.ewma + self.alpha * dt
         return is_straggler
@@ -83,17 +87,28 @@ class TrainSupervisor:
             if self.preempted:
                 ckpt.save(self.ckpt_dir, step, state,
                           {"step": step, "data_index": batches.index})
+                if events.enabled():
+                    events.emit("fault.preempt", step=step,
+                                data_index=batches.index)
+                    events.emit("fault.checkpoint", step=step, sync=True,
+                                data_index=batches.index)
                 return state, step, True
             t0 = time.perf_counter()
             batch = next(batches)
             state, metrics = step_fn(state, batch)
             dt = time.perf_counter() - t0
-            self.straggler.observe(step, dt)
+            straggled = self.straggler.observe(step, dt)
+            if events.enabled():
+                events.emit("train.step", step=step, dt_s=dt,
+                            straggler=straggled)
             if metrics_cb:
                 metrics_cb(step, metrics, dt)
             step += 1
             if step % self.ckpt_every == 0:
                 ckpt.save_async(self.ckpt_dir, step, state,
                                 {"step": step, "data_index": batches.index})
+                if events.enabled():
+                    events.emit("fault.checkpoint", step=step, sync=False,
+                                data_index=batches.index)
         ckpt.wait_pending()
         return state, step, False

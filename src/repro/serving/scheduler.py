@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.models import decode_step, init_cache, lm
 from repro.models.config import ModelConfig
-from repro.observability import MetricsRegistry
+from repro.observability import MetricsRegistry, events
 
 
 @dataclass
@@ -71,7 +71,14 @@ class ContinuousBatcher:
         self.slot_req[slot] = req
         self.metrics.counter("requests_admitted").inc()
         self.metrics.counter("prompt_tokens").inc(t)
+        # the prefill emits the request's first token; account for it
+        # separately so stats() can include it in the throughput calc
+        # (tokens_generated alone would undercount by one per request)
+        self.metrics.counter("prefill_tokens_emitted").inc()
         self.metrics.latency("prefill").observe(time.perf_counter() - t0)
+        if events.enabled():
+            events.emit("scheduler.admit", rid=req.rid, slot=slot,
+                        prompt_tokens=t, queue_depth=len(self.queue))
 
     def _fill_free_slots(self):
         for slot in range(self.b):
@@ -108,6 +115,10 @@ class ContinuousBatcher:
                 self.completed.append(req)
                 self.slot_req[slot] = None     # slot freed for admission
                 self.metrics.counter("requests_completed").inc()
+                if events.enabled():
+                    events.emit("scheduler.complete", rid=req.rid, slot=slot,
+                                tokens=len(req.generated))
+                    events.emit("scheduler.evict", rid=req.rid, slot=slot)
         self.metrics.counter("decode_steps").inc()
         self.metrics.counter("active_slot_steps").inc(active)
         self.metrics.latency("decode_step").observe(time.perf_counter() - t0)
@@ -125,10 +136,16 @@ class ContinuousBatcher:
         """Counters + latency percentiles snapshot (JSON-serializable)."""
         snap = self.metrics.snapshot()
         dec = self.metrics.latencies.get("decode_step")
+        pre = self.metrics.latencies.get("prefill")
         c = snap["counters"]
-        if dec and dec.total_s > 0:
-            # throughput over generated tokens (all active slots advance per step)
-            snap["tokens_per_s"] = c.get("tokens_generated", 0) / dec.total_s
+        # every emitted token: decode steps plus the first token each
+        # prefill produces, over the wall time both phases spent
+        emitted = (c.get("tokens_generated", 0)
+                   + c.get("prefill_tokens_emitted", 0))
+        busy_s = ((dec.total_s if dec else 0.0)
+                  + (pre.total_s if pre else 0.0))
+        if busy_s > 0:
+            snap["tokens_per_s"] = emitted / busy_s
         slots = c.get("decode_steps", 0) * self.b
         snap["slot_occupancy"] = (c.get("active_slot_steps", 0) / slots
                                   if slots else 0.0)

@@ -1,0 +1,56 @@
+"""Benchmark-CLI liveness: the report/bench/gate entry points must keep
+running end-to-end.  Each shells out in --smoke mode (tiny shapes, seconds)
+so argument parsing, imports, and output paths can never silently bit-rot."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(*argv):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return subprocess.run([sys.executable, "-m", *argv], cwd=REPO, env=env,
+                          capture_output=True, text=True, timeout=600)
+
+
+@pytest.mark.slow
+def test_telemetry_report_smoke_cli(tmp_path):
+    chrome = str(tmp_path / "trace.json")
+    r = _run("benchmarks.telemetry_report", "--smoke", "--chrome", chrome)
+    assert r.returncode == 0, r.stderr
+    assert "smoke_3x3" in r.stdout
+    assert "modes:" in r.stdout
+    with open(chrome) as f:
+        doc = json.load(f)
+    assert any(e["ph"] == "X" and e["name"] == "carla_conv"
+               for e in doc["traceEvents"])
+
+
+@pytest.mark.slow
+def test_benchmarks_run_smoke_cli_and_regression_gate(tmp_path):
+    bench = str(tmp_path / "bench.json")
+    r = _run("benchmarks.run", "--smoke", "--bench-json", bench)
+    assert r.returncode == 0, r.stderr
+    assert "Paper-fidelity gate" in r.stdout
+    assert "FAIL" not in r.stdout
+    with open(bench) as f:
+        rec = json.load(f)
+    assert rec["smoke"] and list(rec["networks"]) == ["smoke"]
+    assert len(rec["networks"]["smoke"]["layers"]) == 4
+
+    # the gate passes against the record itself...
+    r = _run("benchmarks.check_regression", "--baseline", bench,
+             "--candidate", bench)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "PASS" in r.stdout
+    # ...and exits nonzero on an injected slowdown
+    r = _run("benchmarks.check_regression", "--baseline", bench,
+             "--candidate", bench, "--inject-slowdown", "10")
+    assert r.returncode != 0
+    assert "PERF REGRESSION" in r.stdout

@@ -76,6 +76,42 @@ def test_capture_restores_prior_state():
     assert len(tr.spans) == 1
 
 
+def test_sequential_captures_preserve_prior_roots():
+    """Regression: capture() used to clear the tracer, destroying spans
+    collected before the block; prior roots must survive, and each capture
+    must see only its own spans."""
+    trace.enable()
+    with trace.span("before"):
+        pass
+    with trace.capture() as tr1:
+        with trace.span("a"):
+            pass
+    with trace.capture() as tr2:
+        with trace.span("b"):
+            pass
+    assert [s.name for s in trace.tracer.spans] == ["before"]
+    assert [s.name for s in tr1.spans] == ["a"]
+    assert [s.name for s in tr2.spans] == ["b"]
+    assert trace.enabled()                       # enabled flag restored too
+
+
+def test_nested_captures_keep_outer_spans():
+    with trace.capture() as outer:
+        with trace.span("o1"):
+            pass
+        with trace.capture() as inner:
+            with trace.span("i1"):
+                pass
+        with trace.span("o2"):
+            pass
+    assert [s.name for s in inner.spans] == ["i1"]
+    assert [s.name for s in outer.spans] == ["o1", "o2"]
+    assert not trace.enabled()
+    assert trace.tracer.spans == []
+    # Capture.find walks the captured forest like Tracer.find
+    assert [s.name for s in outer.find("o2")] == ["o2"]
+
+
 # ------------------- carla_conv spans vs the analytic model -------------------
 def test_carla_span_analytic_cost_matches_layer_cost_exactly():
     """A ResNet-50 layer dispatched through carla_conv must record exactly
@@ -130,6 +166,68 @@ def test_latency_window_percentiles_exact():
         lw.observe(v / 1e3)
     assert lw.percentile(0) == pytest.approx(0.051)
     assert lw.count == 150                       # lifetime count keeps going
+
+
+def test_latency_window_duplicates_across_eviction_boundary():
+    """Duplicate values crossing the maxlen boundary: eviction must remove
+    exactly one copy from the sorted mirror, keeping percentiles exact."""
+    lw = LatencyWindow("dup", maxlen=4)
+    for v in (0.005, 0.005, 0.005, 0.010):
+        lw.observe(v)
+    # evicts one 0.005; window is [0.005, 0.005, 0.010, 0.020]
+    lw.observe(0.020)
+    assert lw._sorted == [0.005, 0.005, 0.010, 0.020]
+    assert lw.percentile(0) == pytest.approx(0.005)
+    assert lw.percentile(100) == pytest.approx(0.020)
+    # evict the remaining duplicates one at a time
+    lw.observe(0.030)
+    lw.observe(0.040)
+    assert lw._sorted == [0.010, 0.020, 0.030, 0.040]
+    assert len(lw._window) == len(lw._sorted) == 4
+
+
+def test_latency_window_single_element_percentiles():
+    lw = LatencyWindow("one", maxlen=8)
+    lw.observe(0.042)
+    for p in (0, 1, 50, 99, 100):
+        assert lw.percentile(p) == pytest.approx(0.042)
+    assert lw.summary()["p50_ms"] == pytest.approx(42.0)
+
+
+def test_latency_window_lifetime_stats_include_evicted():
+    lw = LatencyWindow("life", maxlen=2)
+    for v in (0.001, 0.002, 0.003, 0.004):
+        lw.observe(v)
+    # window only holds the last 2, but lifetime count/mean keep everything
+    assert len(lw._window) == 2
+    assert lw.count == 4
+    assert lw.total_s == pytest.approx(0.010)
+    assert lw.mean_s == pytest.approx(0.0025)
+    assert lw.percentile(0) == pytest.approx(0.003)   # window excludes evicted
+
+
+def test_gauge_and_histogram_in_registry():
+    from repro.observability import Histogram
+
+    m = MetricsRegistry()
+    g = m.gauge("queue_depth")
+    g.inc(5)
+    g.dec(2)
+    assert m.gauge("queue_depth").value == 3
+    h = m.histogram("lat", buckets=(0.01, 0.1, 1.0))
+    for v in (0.005, 0.05, 0.5, 5.0):
+        h.observe(v)
+    cum = dict(h.cumulative())
+    assert cum[0.01] == 1 and cum[0.1] == 2 and cum[1.0] == 3
+    assert cum[float("inf")] == h.count == 4
+    assert h.sum == pytest.approx(5.555)
+    snap = m.snapshot()
+    assert snap["gauges"]["queue_depth"] == 3
+    assert snap["histograms"]["lat"]["count"] == 4
+    # boundary value lands in the bucket it equals (le semantics)
+    h2 = Histogram("b", buckets=(1.0, 2.0))
+    h2.observe(1.0)
+    assert dict(h2.cumulative())[1.0] == 1
 
 
 def test_metrics_registry_snapshot():

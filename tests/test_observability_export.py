@@ -1,0 +1,330 @@
+"""Export-layer tests: Chrome trace_event structure, Prometheus exposition,
+the HTTP exporter, the JSONL event log (and its instrumentation sites), and
+the perf-regression gate."""
+import json
+import urllib.request
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import carla_conv
+from repro.observability import (
+    MetricsExporter,
+    MetricsRegistry,
+    events,
+    prom,
+    to_chrome_trace,
+    trace,
+)
+
+
+@pytest.fixture(autouse=True)
+def _clean_state():
+    trace.disable()
+    trace.clear()
+    events.uninstall()
+    yield
+    trace.disable()
+    trace.clear()
+    events.uninstall()
+
+
+def _traced_conv_spans():
+    x = jnp.ones((1, 14, 14, 8))
+    w = jnp.ones((3, 3, 8, 16))
+    with trace.capture() as tr:
+        carla_conv(x, w, padding=1, name="l1")
+    return tr.spans
+
+
+# ------------------------- chrome trace exporter ------------------------------
+def test_chrome_trace_structure_from_carla_conv():
+    """A carla_conv trace must produce Perfetto-loadable trace events with
+    complete spans, counter tracks for the analytic cost, and flow arrows."""
+    doc = to_chrome_trace(_traced_conv_spans())
+    payload = json.loads(json.dumps(doc))           # must be pure JSON
+    evs = payload["traceEvents"]
+
+    xev = [e for e in evs if e["ph"] == "X"]
+    assert [e["name"] for e in xev] == ["carla_conv", "kernels.conv2d"]
+    for e in xev:
+        for k in ("ts", "dur", "pid", "tid", "args"):
+            assert k in e, e
+        assert e["ts"] >= 0 and e["dur"] > 0
+    # child starts within the parent and on the same track here
+    parent, child = xev
+    assert parent["ts"] <= child["ts"]
+    assert child["ts"] + child["dur"] <= parent["ts"] + parent["dur"] + 1e-3
+
+    counters = [e for e in evs if e["ph"] == "C"]
+    assert counters, "analytic-cost counter tracks missing"
+    names = {e["name"] for e in counters}
+    assert "carla predicted vs measured (ms)" in names
+    pvm = next(e for e in counters
+               if e["name"] == "carla predicted vs measured (ms)")
+    assert pvm["args"]["analytic_ms"] > 0
+    assert pvm["args"]["measured_ms"] > 0
+
+    flows = [e for e in evs if e["ph"] in ("s", "f")]
+    assert len(flows) == 2
+    start, finish = (e for e in flows)
+    assert start["ph"] == "s" and finish["ph"] == "f"
+    assert start["id"] == finish["id"]
+
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert {e["name"] for e in meta} >= {"process_name", "thread_name"}
+
+
+def test_chrome_trace_roundtrips_through_span_json():
+    """Export must work on a trace restored from Tracer.to_json (offline)."""
+    spans = _traced_conv_spans()
+    restored = trace.tracer.from_json(
+        json.dumps([s.to_dict() for s in spans]))
+    doc = to_chrome_trace(restored)
+    assert doc["traceEvents"] == to_chrome_trace(spans)["traceEvents"]
+
+
+def test_chrome_trace_separates_threads():
+    import threading
+
+    trace.enable()
+    with trace.span("main_work"):
+        pass
+
+    def worker():
+        with trace.span("thread_work"):
+            pass
+
+    t = threading.Thread(target=worker)
+    t.start()
+    t.join()
+    doc = to_chrome_trace(trace.tracer.spans)
+    xev = {e["name"]: e for e in doc["traceEvents"] if e["ph"] == "X"}
+    assert xev["main_work"]["tid"] != xev["thread_work"]["tid"]
+
+
+# ----------------------- prometheus exposition --------------------------------
+def _sample_registry():
+    m = MetricsRegistry()
+    m.counter("requests_admitted").inc(3)
+    m.gauge("queue_depth").set(2)
+    h = m.histogram("step_seconds", buckets=(0.01, 0.1, 1.0))
+    for v in (0.005, 0.05, 5.0):
+        h.observe(v)
+    m.latency("prefill").observe(0.02)
+    return m
+
+
+def test_prom_render_exposition_format():
+    text = prom.render(_sample_registry(), namespace="repro")
+    lines = text.splitlines()
+    assert "repro_requests_admitted_total 3" in lines
+    assert "# TYPE repro_requests_admitted_total counter" in lines
+    assert "repro_queue_depth 2" in lines
+    assert "# TYPE repro_queue_depth gauge" in lines
+    assert "# TYPE repro_step_seconds histogram" in lines
+    assert 'repro_step_seconds_bucket{le="0.01"} 1' in lines
+    assert 'repro_step_seconds_bucket{le="0.1"} 2' in lines
+    assert 'repro_step_seconds_bucket{le="1"} 2' in lines
+    assert 'repro_step_seconds_bucket{le="+Inf"} 3' in lines
+    assert "repro_step_seconds_count 3" in lines
+    assert any(line.startswith("repro_step_seconds_sum") for line in lines)
+    assert "# TYPE repro_prefill_seconds summary" in lines
+    assert 'repro_prefill_seconds{quantile="0.5"} 0.02' in lines
+    assert "repro_prefill_seconds_count 1" in lines
+    # bucket counts must be cumulative (monotone non-decreasing)
+    buckets = [int(line.rsplit(" ", 1)[1]) for line in lines
+               if line.startswith("repro_step_seconds_bucket")]
+    assert buckets == sorted(buckets)
+    assert text.endswith("\n")
+
+
+def test_prom_name_sanitization():
+    m = MetricsRegistry()
+    m.counter("tokens/sec-rate").inc()
+    text = prom.render(m, namespace="repro")
+    assert "repro_tokens_sec_rate_total 1" in text
+
+
+def test_metrics_http_exporter_serves_scrape():
+    reg = _sample_registry()
+    ex = MetricsExporter({"serve": reg})
+    port = ex.start()
+    try:
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/metrics", timeout=5) as resp:
+            assert resp.status == 200
+            assert resp.headers["Content-Type"].startswith("text/plain")
+            body = resp.read().decode()
+        assert "repro_serve_requests_admitted_total 3" in body
+        # scrapes are live: mutate and re-scrape
+        reg.counter("requests_admitted").inc()
+        body2 = urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/metrics", timeout=5).read().decode()
+        assert "repro_serve_requests_admitted_total 4" in body2
+        health = urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/healthz", timeout=5).read()
+        assert health == b"ok\n"
+    finally:
+        ex.stop()
+
+
+# ----------------------------- event log --------------------------------------
+def test_event_log_schema_and_threading(tmp_path):
+    path = str(tmp_path / "events.jsonl")
+    events.install(path)
+    assert events.enabled()
+    events.emit("scheduler.admit", rid=1, slot=0, prompt_tokens=4)
+    events.emit("train.step", step=0, dt_s=0.01, straggler=False)
+    events.uninstall()
+    assert not events.enabled()
+    recs = list(events.read(path))
+    assert [r["kind"] for r in recs] == ["scheduler.admit", "train.step"]
+    assert all("ts" in r for r in recs)
+    assert recs[0]["rid"] == 1 and recs[0]["slot"] == 0
+    # disabled emit is a no-op, not an error
+    events.emit("ghost.event", x=1)
+    assert len(list(events.read(path))) == 2
+
+
+def test_scheduler_emits_admit_complete_evict(tmp_path):
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.serving.scheduler import ContinuousBatcher, Request
+
+    path = str(tmp_path / "sched.jsonl")
+    events.install(path)
+    cfg = get_config("smollm-135m", smoke=True)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    b = ContinuousBatcher(cfg, params, batch_slots=1, max_seq=32)
+    prompt = jnp.arange(4, dtype=jnp.int32)
+    b.submit(Request(0, prompt, max_new_tokens=2))
+    b.submit(Request(1, prompt, max_new_tokens=2))
+    b.run()
+    events.uninstall()
+    kinds = [r["kind"] for r in events.read(path)]
+    assert kinds.count("scheduler.admit") == 2
+    assert kinds.count("scheduler.complete") == 2
+    assert kinds.count("scheduler.evict") == 2
+    # slot reuse is visible in the log: request 1 admitted after 0 evicted
+    recs = list(events.read(path))
+    evict0 = next(i for i, r in enumerate(recs)
+                  if r["kind"] == "scheduler.evict" and r["rid"] == 0)
+    admit1 = next(i for i, r in enumerate(recs)
+                  if r["kind"] == "scheduler.admit" and r["rid"] == 1)
+    assert evict0 < admit1
+
+
+def test_supervisor_emits_step_and_checkpoint_events(tmp_path):
+    from repro.data import PrefetchIterator, SyntheticTokenDataset
+    from repro.runtime import TrainSupervisor
+
+    path = str(tmp_path / "train.jsonl")
+    events.install(path)
+    ds = SyntheticTokenDataset(vocab=64, seq_len=8, global_batch=2)
+
+    def step_fn(state, batch):
+        return state, {}
+
+    sup = TrainSupervisor(str(tmp_path / "ckpt"), ckpt_every=2)
+    it = PrefetchIterator(ds, start_index=0)
+    sup.run({"w": jnp.zeros((4,))}, step_fn, it, 0, 4)
+    it.close()
+    events.uninstall()
+    recs = list(events.read(path))
+    kinds = [r["kind"] for r in recs]
+    assert kinds.count("train.step") == 4
+    assert kinds.count("fault.checkpoint") == 2     # steps 2 and 4
+    assert kinds[-1] == "data.closed"
+    steps = [r["step"] for r in recs if r["kind"] == "train.step"]
+    assert steps == [0, 1, 2, 3]
+
+
+def test_elastic_remesh_emits_event(tmp_path):
+    from repro.runtime import plan_remesh
+
+    path = str(tmp_path / "elastic.jsonl")
+    events.install(path)
+    plan_remesh((16, 16), ("data", "model"), devices_available=208)
+    events.uninstall()
+    (rec,) = events.read(path)
+    assert rec["kind"] == "elastic.remesh"
+    assert rec["old_shape"] == [16, 16]
+    assert rec["new_shape"] == [8, 16]
+    assert rec["grad_accum_factor"] == 2
+
+
+# ------------------------- perf-regression gate -------------------------------
+def _bench_record():
+    return {
+        "version": 1, "backend": "cpu", "impl": "auto", "batch": 1,
+        "reps": 2, "smoke": True,
+        "networks": {
+            "smoke": {
+                "total_measured_ms": 2.0,
+                "total_analytic_ms": 0.2,
+                "speed_ratio": 10.0,
+                "layers": [
+                    {"layer": "smoke_3x3",
+                     "dataflow": "3x3_serial_accumulation",
+                     "measured_ms": 0.5, "gflops": 1.0,
+                     "util_vs_peak": 0.6, "analytic_ms": 0.02,
+                     "analytic_puf": 0.23},
+                    {"layer": "smoke_1x1_fs",
+                     "dataflow": "1x1_feature_stationary",
+                     "measured_ms": 1.5, "gflops": 0.4,
+                     "util_vs_peak": 0.25, "analytic_ms": 0.02,
+                     "analytic_puf": 0.12},
+                ],
+            },
+        },
+    }
+
+
+def test_check_regression_passes_on_identical_record():
+    from benchmarks.check_regression import compare
+
+    base = _bench_record()
+    assert compare(base, base) == []
+
+
+def test_check_regression_flags_injected_slowdown():
+    from benchmarks.check_regression import compare, inject_slowdown
+
+    base = _bench_record()
+    slow = inject_slowdown(base, 3.0)
+    problems = compare(base, slow)
+    assert problems, "3x slowdown must trip the gate"
+    assert any("smoke_3x3" in p for p in problems)
+    # speedups never fail
+    fast = inject_slowdown(base, 0.5)
+    assert compare(base, fast) == []
+
+
+def test_check_regression_flags_structural_changes():
+    from benchmarks.check_regression import compare
+
+    base = _bench_record()
+    cand = json.loads(json.dumps(base))
+    cand["networks"]["smoke"]["layers"][0]["dataflow"] = "7x7_row_decomposition"
+    del cand["networks"]["smoke"]["layers"][1]
+    problems = compare(base, cand)
+    assert any("dataflow changed" in p for p in problems)
+    assert any("missing layer" in p for p in problems)
+
+
+def test_committed_baseline_is_self_consistent():
+    """The committed BENCH_7.json must pass the gate against itself."""
+    from benchmarks.check_regression import DEFAULT_BASELINE, compare, load
+
+    base = load(DEFAULT_BASELINE)
+    assert compare(base, base) == []
+    assert set(base["networks"]) == {"resnet50", "vgg16"}
+    assert len(base["networks"]["resnet50"]["layers"]) == 49
+    assert len(base["networks"]["vgg16"]["layers"]) == 13
+    for net in base["networks"].values():
+        for layer in net["layers"]:
+            assert layer["measured_ms"] > 0
+            assert layer["gflops"] > 0
+            assert 0 < layer["util_vs_peak"] <= 1

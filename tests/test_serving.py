@@ -2,6 +2,7 @@
 sequential single-request generation."""
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.configs import get_config
 from repro.models import init_params, lm
@@ -53,3 +54,29 @@ def test_slot_reuse_admits_queued_requests():
             max_new_tokens=3))
     done = batcher.run()
     assert sorted(r.rid for r in done) == [0, 1]
+
+
+def test_token_accounting_counts_every_emitted_token():
+    """Every token a request ends up with must be counted: the decode-step
+    tokens in ``tokens_generated`` plus the one token each prefill emits in
+    ``prefill_tokens_emitted`` (regression: the prefill token used to be
+    dropped, so tokens_per_s undercounted)."""
+    cfg = get_config("smollm-135m", smoke=True)
+    params = init_params(cfg, KEY)
+    batcher = ContinuousBatcher(cfg, params, batch_slots=2, max_seq=32)
+    for i in range(3):
+        batcher.submit(Request(
+            rid=i, prompt=jnp.arange(4, dtype=jnp.int32) + i,
+            max_new_tokens=4))
+    done = batcher.run()
+    assert len(done) == 3
+    stats = batcher.stats()
+    c = stats["counters"]
+    emitted = sum(len(r.generated) for r in done)
+    assert c["prefill_tokens_emitted"] == 3      # one per admitted request
+    assert c["tokens_generated"] + c["prefill_tokens_emitted"] == emitted
+    # throughput covers all emitted tokens over prefill+decode wall time
+    pre = batcher.metrics.latencies["prefill"]
+    dec = batcher.metrics.latencies["decode_step"]
+    assert stats["tokens_per_s"] == pytest.approx(
+        emitted / (pre.total_s + dec.total_s))
