@@ -1,11 +1,13 @@
 """Benchmark driver: one table per paper figure + kernel bench + roofline.
 
 Run:  PYTHONPATH=src python -m benchmarks.run  [--skip-kernels]
-          [--smoke] [--bench-json BENCH_7.json]
+          [--smoke] [--bench-json BENCH_8.json]
 
-``--bench-json`` measures the ResNet-50/VGG-16 layer sets through the traced
-``carla_conv`` path and writes the per-layer measured ms / GFLOP/s /
-utilization record that ``benchmarks/check_regression.py`` gates against.
+``--bench-json`` measures the ResNet-50/VGG-16 layer sets — unfused and
+through the fused-epilogue path — via traced ``carla_conv`` dispatches and
+writes the per-layer measured ms / GFLOP/s / utilization / bytes record that
+``benchmarks/check_regression.py`` gates against, plus the per-bottleneck-
+block fused-vs-unfused HBM-bytes delta (``fused_delta``).
 ``--smoke`` keeps everything in seconds: analytic tables + fidelity gate
 only, and the bench record (if requested) uses the tiny smoke layer set.
 """
@@ -81,7 +83,14 @@ def main() -> None:
 
     if args.bench_json:
         from .telemetry_report import collect_bench
-        nets = ["smoke"] if args.smoke else ["resnet50", "vgg16"]
+        # each net is measured unfused AND through the fused-epilogue path;
+        # the ``<net>_fused`` runs also record the per-bottleneck-block
+        # fused-vs-unfused bytes/latency delta (``fused_delta``).  The full
+        # baseline also carries the smoke nets so ``check_regression --smoke``
+        # (the tier-1 gate) can compare against the committed record.
+        nets = (["smoke", "smoke_fused"] if args.smoke
+                else ["smoke", "smoke_fused",
+                      "resnet50", "resnet50_fused", "vgg16", "vgg16_fused"])
         reps = 1 if args.smoke else args.bench_reps
         record = collect_bench(nets, reps=reps, smoke=args.smoke)
         with open(args.bench_json, "w") as f:
@@ -90,6 +99,12 @@ def main() -> None:
         n_layers = sum(len(v["layers"]) for v in record["networks"].values())
         print(f"\nbench record: {n_layers} layers over "
               f"{'/'.join(record['networks'])} -> {args.bench_json}")
+        for net, fd in record.get("fused_delta", {}).items():
+            worst = min(fd["blocks"], key=lambda b: b["saved_mb"])
+            print(f"fused epilogue [{net}]: {fd['total_saved_mb']:.1f} MB "
+                  f"HBM round-trips saved over {len(fd['blocks'])} blocks, "
+                  f"{fd['total_speedup']:.2f}x wall; min block saving "
+                  f"{worst['saved_mb']:.2f} MB ({worst['block']})")
 
     if not ok:
         sys.exit(1)

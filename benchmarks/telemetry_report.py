@@ -9,7 +9,12 @@ Runs every conv layer of ResNet-50 (and VGG-16 with --net vgg16) through
 
 Run:  PYTHONPATH=src python -m benchmarks.telemetry_report [--net resnet50]
           [--batch 1] [--reps 3] [--limit N] [--json out.json]
-          [--chrome out.trace.json] [--smoke]
+          [--chrome out.trace.json] [--smoke] [--fused]
+
+``--fused`` dispatches every layer with a fused epilogue (folded-BN
+scale/bias + ReLU, shortcut-add on bottleneck-closing 1x1s); the report's
+``epilogue`` / ``savedMB`` columns show what was fused and the HBM
+round-trip bytes the fusion eliminated per layer.
 
 ``--smoke`` swaps in the tiny ``smoke_conv_layers`` set (one layer per
 dataflow, reps=1, overhead check skipped) so CI can keep this CLI alive in
@@ -33,7 +38,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import carla_conv
+from repro.core import Epilogue, carla_conv, epilogue_dram_delta_bytes
 from repro.core.networks import (
     resnet50_conv_layers,
     smoke_conv_layers,
@@ -46,6 +51,9 @@ NET_LAYERS = {
     "vgg16": vgg16_conv_layers,
     "smoke": smoke_conv_layers,
 }
+# ``<net>_fused`` runs the same layer set with a per-layer fused epilogue
+# (folded-BN scale/bias + ReLU; residual on the bottleneck-closing 1x1s).
+FUSED_SUFFIX = "_fused"
 
 
 def _layer_operands(layer, batch: int, key):
@@ -57,7 +65,24 @@ def _layer_operands(layer, batch: int, key):
     return x, w
 
 
-def run_network(layers, batch: int, reps: int, impl: str = "auto"):
+def _wants_residual(layer) -> bool:
+    """Layers that close a bottleneck block get the shortcut add fused in."""
+    return layer.name.endswith("_1x1b") or layer.name.endswith("_ws")
+
+
+def _layer_epilogue(layer, batch: int, key) -> Epilogue:
+    ks, kb, kr = jax.random.split(key, 3)
+    scale = 1.0 + 0.1 * jax.random.normal(ks, (layer.K,), jnp.float32)
+    bias = 0.1 * jax.random.normal(kb, (layer.K,), jnp.float32)
+    residual = None
+    if _wants_residual(layer):
+        residual = jax.random.normal(
+            kr, (batch, layer.OL, layer.OL, layer.K), jnp.float32)
+    return Epilogue(scale=scale, bias=bias, relu=True, residual=residual)
+
+
+def run_network(layers, batch: int, reps: int, impl: str = "auto",
+                fused: bool = False):
     """Warm every layer (compile), then record ``reps`` traced dispatches and
     keep each layer's best (min-wall) span — the compile-free steady state."""
     key = jax.random.PRNGKey(0)
@@ -65,6 +90,9 @@ def run_network(layers, batch: int, reps: int, impl: str = "auto"):
     for i, layer in enumerate(layers):
         x, w = _layer_operands(layer, batch, jax.random.fold_in(key, i))
         kw = dict(stride=layer.S, padding=layer.Z, impl=impl, name=layer.name)
+        if fused:
+            kw["epilogue"] = _layer_epilogue(layer, batch,
+                                             jax.random.fold_in(key, 1000 + i))
         jax.block_until_ready(carla_conv(x, w, **kw))        # warm/compile
         for _ in range(reps):
             with trace.capture() as tr:
@@ -76,6 +104,124 @@ def run_network(layers, batch: int, reps: int, impl: str = "auto"):
     return [best[layer.name] for layer in layers]
 
 
+# ----------------------- fused-vs-unfused block delta -------------------------
+def _bottleneck_blocks(layers):
+    """Group ResNet bottleneck triplets (1x1a, 3x3, 1x1b); anything else is
+    its own single-layer 'block'."""
+    blocks, i = [], 0
+    while i < len(layers):
+        l = layers[i]
+        if (l.name.endswith("_1x1a") and i + 2 < len(layers)
+                and layers[i + 1].name.endswith("_3x3")
+                and layers[i + 2].name.endswith("_1x1b")):
+            blocks.append((l.name[:-len("_1x1a")], layers[i:i + 3]))
+            i += 3
+        else:
+            blocks.append((l.name, [l]))
+            i += 1
+    return blocks
+
+
+def _run_block(layers, x0, weights, epilogues, fused: bool):
+    """One forward through a block; returns (output, traced carla spans)."""
+    with trace.capture() as tr:
+        x = x0
+        for layer, w, ep in zip(layers, weights, epilogues):
+            kw = dict(stride=layer.S, padding=layer.Z, name=layer.name)
+            if fused:
+                x = carla_conv(x, w, epilogue=ep, **kw)
+            else:
+                x = carla_conv(x, w, **kw)
+                x = x * ep.scale + ep.bias
+                if ep.residual is not None:
+                    x = x + ep.residual
+                if ep.relu:
+                    x = jnp.maximum(x, 0.0)
+        jax.block_until_ready(x)
+    return x, tr.spans
+
+
+def collect_fused_delta(net: str, batch: int = 1, reps: int = 2,
+                        smoke: bool = False) -> dict:
+    """Measure each bottleneck block fused vs. unfused.
+
+    Bytes are the spans' measured array footprints; the unfused side adds the
+    HBM round-trips of its separate element-wise passes (one read + one write
+    of the output fmap per op, plus the scale/bias/residual operand reads).
+    The fused side must come out strictly lower on every block — that is the
+    whole point of the epilogue.
+    """
+    layers = NET_LAYERS[net]()
+    key = jax.random.PRNGKey(7)
+    blocks_out = []
+    for bi, (bname, blayers) in enumerate(_bottleneck_blocks(layers)):
+        bkey = jax.random.fold_in(key, bi)
+        first = blayers[0]
+        x0 = jax.random.normal(jax.random.fold_in(bkey, 0),
+                               (batch, first.IL, first.IL, first.IC),
+                               jnp.float32)
+        weights, epilogues = [], []
+        for li, layer in enumerate(blayers):
+            _, w = _layer_operands(layer, batch, jax.random.fold_in(bkey, li))
+            weights.append(w)
+            # residual on the block-closing layer (bottleneck shortcut add)
+            ep = _layer_epilogue(layer, batch, jax.random.fold_in(bkey, 100 + li))
+            if li != len(blayers) - 1 and ep.residual is not None:
+                ep = Epilogue(scale=ep.scale, bias=ep.bias, relu=True)
+            if li == len(blayers) - 1 and ep.residual is None and len(blayers) > 1:
+                res = jax.random.normal(
+                    jax.random.fold_in(bkey, 99),
+                    (batch, layer.OL, layer.OL, layer.K), jnp.float32)
+                ep = Epilogue(scale=ep.scale, bias=ep.bias, relu=True,
+                              residual=res)
+            epilogues.append(ep)
+
+        stats = {}
+        for mode, fused in (("fused", True), ("unfused", False)):
+            _run_block(blayers, x0, weights, epilogues, fused)     # warm
+            best_s, spans = float("inf"), None
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                _, sp = _run_block(blayers, x0, weights, epilogues, fused)
+                dt = time.perf_counter() - t0
+                if dt < best_s:
+                    best_s, spans = dt, sp
+            byts = sum(s.attrs["bytes_touched"] for s in spans)
+            if not fused:
+                # the element-wise passes the fused flush absorbs: each one
+                # reads and rewrites the full output fmap, plus its operands
+                for layer, ep in zip(blayers, epilogues):
+                    out_b = 4 * batch * layer.OL * layer.OL * layer.K  # fp32
+                    byts += 2 * out_b * ep.n_fused_ops
+                    byts += sum(a.size * a.dtype.itemsize for a in
+                                (ep.scale, ep.bias, ep.residual)
+                                if a is not None)
+            stats[mode] = {"ms": best_s * 1e3, "bytes": byts}
+
+        blocks_out.append({
+            "block": bname,
+            "layers": len(blayers),
+            "fused_ms": stats["fused"]["ms"],
+            "unfused_ms": stats["unfused"]["ms"],
+            "speedup": stats["unfused"]["ms"] / max(stats["fused"]["ms"], 1e-9),
+            "fused_bytes_mb": stats["fused"]["bytes"] / 1e6,
+            "unfused_bytes_mb": stats["unfused"]["bytes"] / 1e6,
+            "saved_mb": (stats["unfused"]["bytes"]
+                         - stats["fused"]["bytes"]) / 1e6,
+            "analytic_saved_mb": sum(
+                epilogue_dram_delta_bytes(
+                    layer, scale_bias=True, relu=ep.relu,
+                    residual=ep.residual is not None)
+                for layer, ep in zip(blayers, epilogues)) / 1e6,
+        })
+    return {
+        "blocks": blocks_out,
+        "total_saved_mb": sum(b["saved_mb"] for b in blocks_out),
+        "total_speedup": (sum(b["unfused_ms"] for b in blocks_out)
+                          / max(sum(b["fused_ms"] for b in blocks_out), 1e-9)),
+    }
+
+
 def collect_bench(nets: list[str], batch: int = 1, reps: int = 2,
                   impl: str = "auto", smoke: bool = False) -> dict:
     """Measure the given layer sets and return the BENCH_*.json record.
@@ -83,25 +229,33 @@ def collect_bench(nets: list[str], batch: int = 1, reps: int = 2,
     Per layer: measured wall ms (best of ``reps``), achieved GFLOP/s,
     utilization vs the run's peak, plus the analytic side (ASIC ms, PUF) so
     regressions in achieved-vs-analytic are visible, not just wall time.
+
+    A net named ``<base>_fused`` measures ``<base>``'s layer set through the
+    fused-epilogue path (and triggers the per-bottleneck-block fused-vs-
+    unfused delta measurement, recorded under ``fused_delta``).
     """
     record: dict = {
-        "version": 1,
+        "version": 2,
         "backend": jax.default_backend(),
         "impl": impl,
         "batch": batch,
         "reps": reps,
         "smoke": smoke,
         "networks": {},
+        "fused_delta": {},
     }
     for net in nets:
-        layers = NET_LAYERS[net]()
-        spans = run_network(layers, batch, reps, impl)
+        fused = net.endswith(FUSED_SUFFIX)
+        base = net[:-len(FUSED_SUFFIX)] if fused else net
+        layers = NET_LAYERS[base]()
+        spans = run_network(layers, batch, reps, impl, fused=fused)
         rows = reconcile(spans)
         t = totals(rows)
         record["networks"][net] = {
             "total_measured_ms": t["measured_ms_per_image"],
             "total_analytic_ms": t["analytic_ms"],
             "speed_ratio": t["speed_ratio"],
+            "total_fused_saved_mb": t["fused_saved_mb"],
             "layers": [{
                 "layer": r.layer,
                 "dataflow": r.dataflow,
@@ -110,8 +264,14 @@ def collect_bench(nets: list[str], batch: int = 1, reps: int = 2,
                 "util_vs_peak": r.measured_util,
                 "analytic_ms": r.analytic_ms,
                 "analytic_puf": r.analytic_puf,
+                "epilogue": r.epilogue,
+                "bytes_mb": r.measured_bytes_mb,
+                "fused_saved_mb": r.fused_saved_mb,
             } for r in rows],
         }
+        if fused:
+            record["fused_delta"][base] = collect_fused_delta(
+                base, batch=batch, reps=reps, smoke=smoke)
     return record
 
 
@@ -153,6 +313,10 @@ def main() -> None:
                     help="only the first N layers (0 = all)")
     ap.add_argument("--impl", choices=["auto", "ref", "pallas"],
                     default="auto")
+    ap.add_argument("--fused", action="store_true",
+                    help="dispatch each layer with a fused epilogue "
+                         "(folded-BN scale/bias + ReLU; residual on "
+                         "bottleneck-closing 1x1s)")
     ap.add_argument("--peak-gflops", type=float, default=0.0,
                     help="backend peak for util%% (0 = best layer in run)")
     ap.add_argument("--json", default=None,
@@ -173,8 +337,9 @@ def main() -> None:
         layers = layers[:args.limit]
 
     print(f"=== {net}: analytic (ASIC @200 MHz, batch-1) vs measured "
-          f"({jax.default_backend()}, batch={args.batch}, impl={args.impl}) ===")
-    spans = run_network(layers, args.batch, reps, args.impl)
+          f"({jax.default_backend()}, batch={args.batch}, impl={args.impl}"
+          f"{', fused epilogue' if args.fused else ''}) ===")
+    spans = run_network(layers, args.batch, reps, args.impl, fused=args.fused)
     rows = reconcile(spans, peak_gflops=args.peak_gflops or None)
     print(format_table(rows))
 
@@ -183,6 +348,7 @@ def main() -> None:
           f"{t['analytic_ms']:.1f} ms, {t['analytic_dram_mb']:.1f} DRAM MB | "
           f"measured {t['measured_ms_per_image']:.1f} ms/image, "
           f"{t['measured_bytes_mb']:.1f} MB arrays | "
+          f"fused-epilogue HBM saved {t['fused_saved_mb']:.1f} MB | "
           f"wall/ASIC = {t['speed_ratio']:.2f}x")
     by_mode: dict[str, int] = {}
     for r in rows:

@@ -3,11 +3,14 @@ from .carla import ConvPlan, carla_conv, plan_conv
 from .cost_model import (
     LayerCost,
     NetworkCost,
+    epilogue_dram_delta,
+    epilogue_dram_delta_bytes,
     layer_cost,
     network_cost,
     resnet50_cost,
     vgg16_cost,
 )
+from .fuse import Epilogue, apply_epilogue, fold_bn, fold_bn_into_conv
 from .modes import (
     ConvLayer,
     Dataflow,
@@ -23,8 +26,10 @@ from .networks import (
 )
 
 __all__ = [
-    "ConvLayer", "ConvPlan", "Dataflow", "LayerCost", "NetworkCost",
-    "Stationarity", "carla_conv", "layer_cost", "network_cost", "plan_conv",
+    "ConvLayer", "ConvPlan", "Dataflow", "Epilogue", "LayerCost",
+    "NetworkCost", "Stationarity", "apply_epilogue", "carla_conv",
+    "epilogue_dram_delta", "epilogue_dram_delta_bytes", "fold_bn",
+    "fold_bn_into_conv", "layer_cost", "network_cost", "plan_conv",
     "resnet50_conv_layers", "resnet50_projection_shortcuts", "resnet50_cost",
     "select_dataflow", "select_stationarity", "smoke_conv_layers",
     "vgg16_conv_layers", "vgg16_cost",

@@ -6,6 +6,12 @@ dataflow the ASIC would have used, routes to the corresponding kernel, and can
 report the analytic cost (cycles / DRAM accesses / PUF) the ASIC model
 predicts for that layer — so a network built from ``carla_conv`` carries its
 own performance model, exactly like the paper's evaluation methodology.
+
+Passing ``epilogue=Epilogue(scale, bias, relu, residual)`` fuses folded-BN,
+the shortcut add, and the activation into the kernel's flush step (see
+``core.fuse``): the output feature map is written to HBM once instead of
+round-tripping once per element-wise op — the TPU analogue of the paper's
+on-chip partial-result residency.
 """
 from __future__ import annotations
 
@@ -17,6 +23,7 @@ import jax.numpy as jnp
 from repro.kernels import ops
 from repro.observability import trace
 from .cost_model import LayerCost, layer_cost
+from .fuse import Epilogue
 from .modes import ConvLayer, Dataflow, select_dataflow
 
 
@@ -36,43 +43,52 @@ def plan_conv(x_shape: tuple[int, ...], w_shape: tuple[int, ...],
     return ConvPlan(layer, select_dataflow(layer), layer_cost(layer))
 
 
-def _dispatch(x, w, plan: ConvPlan, stride: int, padding: int, impl: str):
+def _dispatch(x, w, plan: ConvPlan, stride: int, padding: int, impl: str,
+              epilogue: Epilogue | None):
     if plan.dataflow in (Dataflow.CONV1X1_FEATURE_STATIONARY,
                          Dataflow.CONV1X1_WEIGHT_STATIONARY):
         # Both 1x1 modes are the dual-stationarity GEMM; ops.conv1x1 picks the
         # residency from the feature count (the same quantity the paper uses).
-        return ops.conv1x1(x, w[0, 0], stride=stride, impl=impl)
+        return ops.conv1x1(x, w[0, 0], stride=stride, impl=impl,
+                           epilogue=epilogue)
 
     # 3x3 serial accumulation and 7x7 row decomposition share the
     # tap-accumulation kernel (the MXU removes the 3-tap register limit that
     # forced the ASIC's 21-piece split; see kernels/conv2d.py docstring).
-    return ops.conv2d(x, w, stride=stride, padding=padding, impl=impl)
+    return ops.conv2d(x, w, stride=stride, padding=padding, impl=impl,
+                      epilogue=epilogue)
 
 
 def carla_conv(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1,
                padding: int = 0, impl: str = "auto",
+               epilogue: Epilogue | None = None,
                name: str = "conv") -> jnp.ndarray:
     """Reconfigurable convolution: dispatches on the controller's mode choice.
 
     x: (B, H, W, C); w: (FH, FW, C, K) (use (1, 1, C, K) or (C, K) for 1x1).
+    epilogue: optional fused flush (folded-BN scale/bias, residual add, ReLU)
+    applied on the fp32 accumulator before the single HBM writeback.
 
     With tracing enabled (``observability.trace``) every dispatch records a
     ``carla_conv`` span carrying both sides of the paper's ledger: the
     dataflow the controller picked with its analytic ``LayerCost``
-    (cycles / DRAM bytes / PUF), and the measured wall time + bytes of the
-    kernel it actually ran (as a child span from ``kernels.ops``).
+    (cycles / DRAM bytes / PUF), the epilogue combination that was fused
+    (``epilogue=`` attr + ``epilogue_hbm_saved`` bytes), and the measured wall
+    time + bytes of the kernel it actually ran (as a child span from
+    ``kernels.ops``).
     """
     if w.ndim == 2:
         w = w[None, None]
     plan = plan_conv(x.shape, w.shape, stride, padding, name=name)
 
     if not trace.enabled():
-        return _dispatch(x, w, plan, stride, padding, impl)
+        return _dispatch(x, w, plan, stride, padding, impl, epilogue)
 
+    ep = epilogue or Epilogue()
     cost = plan.cost
     with trace.span(
             "carla_conv", layer=plan.layer.name,
-            dataflow=plan.dataflow.value,
+            dataflow=plan.dataflow.value, epilogue=ep.tag,
             x_shape=list(x.shape), w_shape=list(w.shape),
             stride=stride, padding=padding, batch=int(x.shape[0]),
             macs=cost.macs, dense_macs=plan.layer.dense_macs,
@@ -80,10 +96,22 @@ def carla_conv(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1,
             analytic_time_ms=cost.time_s * 1e3,
             analytic_dram_bytes=cost.dram_bytes,
             analytic_puf=cost.puf) as sp:
-        out = _dispatch(x, w, plan, stride, padding, impl)
+        out = _dispatch(x, w, plan, stride, padding, impl, epilogue)
         jax.block_until_ready(out)
         # bytes the dispatch actually touched (operands + result); the child
-        # kernel span records the same so nested sums stay consistent.
-        sp.attrs["bytes_touched"] = sum(
-            a.size * a.dtype.itemsize for a in (x, w, out))
+        # kernel span records the same so nested sums stay consistent.  A
+        # strided 1x1 only reads the subsampled input view, and fused epilogue
+        # operands (scale/bias vectors, residual) are part of the footprint.
+        if plan.layer.FL == 1 and stride != 1:
+            x_bytes = (x.shape[0] * -(-x.shape[1] // stride)
+                       * -(-x.shape[2] // stride) * x.shape[3]
+                       * x.dtype.itemsize)
+        else:
+            x_bytes = x.size * x.dtype.itemsize
+        sp.attrs["bytes_touched"] = x_bytes + sum(
+            a.size * a.dtype.itemsize for a in (w, out, ep.scale, ep.bias,
+                                                ep.residual) if a is not None)
+        if ep.n_fused_ops:
+            sp.attrs["epilogue_hbm_saved"] = \
+                2 * ep.n_fused_ops * out.size * out.dtype.itemsize
     return out

@@ -140,6 +140,25 @@ def layer_cost(layer: ConvLayer) -> LayerCost:
                      int(dram_out), layer.macs)
 
 
+def epilogue_dram_delta(layer: ConvLayer, *, scale_bias: bool = False,
+                        relu: bool = False, residual: bool = False) -> int:
+    """Extra DRAM words an UNfused epilogue costs over the fused flush.
+
+    Each element-wise pass (folded-BN scale/bias, residual add, ReLU) over an
+    unfused conv output reads the full OLxOLxK feature map from DRAM and
+    writes it back; fusing it into the kernel's flush removes both transfers.
+    The residual *operand* is read once either way, so it does not appear in
+    the delta.  Returned in 16-bit words (the paper's unit); multiply by
+    ``WORD_BYTES`` for bytes.
+    """
+    n_ops = int(scale_bias) + int(relu) + int(residual)
+    return 2 * n_ops * layer.OL * layer.OL * layer.K
+
+
+def epilogue_dram_delta_bytes(layer: ConvLayer, **ops) -> int:
+    return epilogue_dram_delta(layer, **ops) * WORD_BYTES
+
+
 @dataclass(frozen=True)
 class NetworkCost:
     name: str

@@ -17,6 +17,16 @@ The paper's §III.A dataflow, transplanted to the TPU memory hierarchy:
   pipeline feedback paths.
 * **Paired-SRAM overlap**: Pallas grid pipelining double-buffers the streamed
   weight tiles while compute proceeds.
+* **Fused flush epilogue**: on the last reduction step the kernel can apply a
+  per-channel scale/bias (inference-folded BN), a residual add, and ReLU
+  *directly on the fp32 VMEM accumulator* before the single HBM writeback.
+  Unfused, each of those element-wise steps is a full read+write round-trip
+  of the output feature map through HBM; fused, the feature map crosses the
+  HBM boundary exactly once — the TPU twin of CARLA keeping partial results
+  on-chip until a sub-out-fmap is complete, and of MMIE-style in-pipeline
+  activation before writeback.  The scale/bias ride in as one tiny (2, K)
+  operand; the residual streams in with the same block map as the output, so
+  it is read once (it would be read once by the unfused add too).
 
 Zero padding is applied by index arithmetic in the wrapper (pad once in HBM);
 the paper's MUX-based zero-pad insertion is register-level micro-architecture
@@ -39,14 +49,23 @@ BK = 128   # output-channel tile
 BC = 128   # input-channel tile
 
 
-def _conv2d_kernel(x_ref, w_ref, o_ref, acc_ref, *,
-                   fh: int, fw: int, stride: int, n_c: int):
+def _conv2d_kernel(*refs, fh: int, fw: int, stride: int, n_c: int,
+                   has_sb: bool, has_res: bool, relu: bool):
     """grid = (B, K/bk, C/bc); c innermost (reduction axis).
 
-    x_ref: (1, HP, WP, bc) padded input block (VMEM-resident across all taps)
-    w_ref: (fh, fw, bc, bk) weight tile (streamed)
-    o_ref: (1, OH, OW, bk); acc_ref: fp32 (OH, OW, bk) scratch.
+    refs = (x_ref, w_ref, [sb_ref], [res_ref], o_ref, acc_ref):
+      x_ref:   (1, HP, WP, bc) padded input block (VMEM-resident across taps)
+      w_ref:   (fh, fw, bc, bk) weight tile (streamed)
+      sb_ref:  (2, bk) fp32 — row 0 scale, row 1 bias (when has_sb)
+      res_ref: (1, OH, OW, bk) residual block (when has_res)
+      o_ref:   (1, OH, OW, bk); acc_ref: fp32 (OH, OW, bk) scratch.
     """
+    it = iter(refs)
+    x_ref, w_ref = next(it), next(it)
+    sb_ref = next(it) if has_sb else None
+    res_ref = next(it) if has_res else None
+    o_ref, acc_ref = next(it), next(it)
+
     c = pl.program_id(2)
 
     @pl.when(c == 0)
@@ -71,13 +90,35 @@ def _conv2d_kernel(x_ref, w_ref, o_ref, acc_ref, *,
 
     @pl.when(c == n_c - 1)
     def _flush():
-        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+        # Fused epilogue: applied on the fp32 accumulator, then ONE writeback.
+        y = acc_ref[...]
+        if has_sb:
+            y = y * sb_ref[0][None, None, :] + sb_ref[1][None, None, :]
+        if has_res:
+            y = y + res_ref[0].astype(jnp.float32)
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        o_ref[0] = y.astype(o_ref.dtype)
+
+
+def _pack_scale_bias(scale, bias, k: int, kpad: int):
+    """Stack (scale, bias) into one fp32 (2, K+kpad) operand (defaults 1/0)."""
+    sc = jnp.ones((k,), jnp.float32) if scale is None else scale.astype(jnp.float32)
+    bi = jnp.zeros((k,), jnp.float32) if bias is None else bias.astype(jnp.float32)
+    sb = jnp.stack([sc, bi])
+    return jnp.pad(sb, ((0, 0), (0, kpad)))
 
 
 def conv2d(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1,
            padding: int = 0, bk: int = BK, bc: int = BC,
+           scale: jnp.ndarray | None = None, bias: jnp.ndarray | None = None,
+           relu: bool = False, residual: jnp.ndarray | None = None,
            interpret: bool = True) -> jnp.ndarray:
-    """x: (B, H, W, C), w: (FH, FW, C, K) -> (B, OH, OW, K)."""
+    """x: (B, H, W, C), w: (FH, FW, C, K) -> (B, OH, OW, K).
+
+    scale/bias ((K,)), residual ((B, OH, OW, K)) and relu are fused into the
+    flush step — see the module docstring's fused-flush design note.
+    """
     b, h, wd, cin = x.shape
     fh, fw, cin2, k = w.shape
     assert cin == cin2, (x.shape, w.shape)
@@ -95,18 +136,32 @@ def conv2d(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1,
     n_c = (cin + cpad) // bc
     n_k = (k + kpad) // bk
 
+    has_sb = scale is not None or bias is not None
+    has_res = residual is not None
+
+    operands = [xp, wp]
+    in_specs = [
+        # input block: resident across all taps of a (b, c) visit
+        pl.BlockSpec((1, hp, wp_, bc), lambda i, j, l: (i, 0, 0, l)),
+        # weight tile: streamed
+        pl.BlockSpec((fh, fw, bc, bk), lambda i, j, l: (0, 0, l, j)),
+    ]
+    if has_sb:
+        operands.append(_pack_scale_bias(scale, bias, k, kpad))
+        in_specs.append(pl.BlockSpec((2, bk), lambda i, j, l: (0, j)))
+    if has_res:
+        assert residual.shape == (b, oh, ow, k), (residual.shape, (b, oh, ow, k))
+        operands.append(jnp.pad(residual, ((0, 0), (0, 0), (0, 0), (0, kpad))))
+        in_specs.append(pl.BlockSpec((1, oh, ow, bk), lambda i, j, l: (i, 0, 0, j)))
+
     out = pl.pallas_call(
-        functools.partial(_conv2d_kernel, fh=fh, fw=fw, stride=stride, n_c=n_c),
+        functools.partial(_conv2d_kernel, fh=fh, fw=fw, stride=stride, n_c=n_c,
+                          has_sb=has_sb, has_res=has_res, relu=relu),
         grid=(b, n_k, n_c),
-        in_specs=[
-            # input block: resident across all taps of a (b, c) visit
-            pl.BlockSpec((1, hp, wp_, bc), lambda i, j, l: (i, 0, 0, l)),
-            # weight tile: streamed
-            pl.BlockSpec((fh, fw, bc, bk), lambda i, j, l: (0, 0, l, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, oh, ow, bk), lambda i, j, l: (i, 0, 0, j)),
         out_shape=jax.ShapeDtypeStruct((b, oh, ow, k + kpad), x.dtype),
         scratch_shapes=[pltpu.VMEM((oh, ow, bk), jnp.float32)],
         interpret=interpret,
-    )(xp, wp)
+    )(*operands)
     return out[..., :k]

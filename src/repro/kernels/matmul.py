@@ -16,6 +16,11 @@ residency choices, mirroring the paper's §III.B / §III.C reconfiguration:
   blocks ``(C, bk)`` stream through exactly once — Eq (11)'s "each filter
   weight is only fetched once".  Use when M < one MXU tile: decode.
 
+Both kernels accept the same fused epilogue as ``conv2d``: per-column
+scale/bias (folded BN), a residual operand, and ReLU, applied on the fp32
+accumulator in the flush step so the output crosses HBM exactly once (the
+1x1 convs of a bottleneck block route here via ``ops.conv1x1``).
+
 ``matmul`` picks the variant via ``core.modes.select_stationarity`` — the
 software twin of CARLA's controller.  Grid pipelining double-buffers the
 streamed operand, the TPU analogue of the paper's paired wide/narrow SRAMs.
@@ -44,9 +49,34 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
     return jnp.pad(x, pads)
 
 
+def _pack_scale_bias(scale, bias, k: int, bk: int) -> jnp.ndarray:
+    """Stack (scale, bias) into one fp32 (2, K-padded) operand (defaults 1/0)."""
+    sc = jnp.ones((k,), jnp.float32) if scale is None else scale.astype(jnp.float32)
+    bi = jnp.zeros((k,), jnp.float32) if bias is None else bias.astype(jnp.float32)
+    return _pad_to(jnp.stack([sc, bi]), 1, bk)
+
+
+def _epilogue(y, sb_ref, res_ref, relu: bool):
+    """Apply the fused epilogue to an fp32 tile right before writeback."""
+    if sb_ref is not None:
+        y = y * sb_ref[0][None, :] + sb_ref[1][None, :]
+    if res_ref is not None:
+        y = y + res_ref[...].astype(jnp.float32)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
 # --------------------------- activation-stationary ---------------------------
-def _mm_act_stationary_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_c: int, bc: int):
+def _mm_act_stationary_kernel(*refs, n_c: int, bc: int,
+                              has_sb: bool, has_res: bool, relu: bool):
     """grid = (M/bm, K/bk, C/bc); c innermost is the reduction axis."""
+    it = iter(refs)
+    x_ref, w_ref = next(it), next(it)
+    sb_ref = next(it) if has_sb else None
+    res_ref = next(it) if has_res else None
+    o_ref, acc_ref = next(it), next(it)
+
     c = pl.program_id(2)
 
     @pl.when(c == 0)
@@ -59,11 +89,16 @@ def _mm_act_stationary_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_c: int, bc: int
 
     @pl.when(c == n_c - 1)
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        y = _epilogue(acc_ref[...], sb_ref, res_ref, relu)
+        o_ref[...] = y.astype(o_ref.dtype)
 
 
 def matmul_act_stationary(x: jnp.ndarray, w: jnp.ndarray, *,
                           bm: int = BM, bk: int = BK, bc: int = BC,
+                          scale: jnp.ndarray | None = None,
+                          bias: jnp.ndarray | None = None,
+                          relu: bool = False,
+                          residual: jnp.ndarray | None = None,
                           interpret: bool = True) -> jnp.ndarray:
     """(M, C) @ (C, K); activation row-block VMEM-resident, weights stream."""
     m, c = x.shape
@@ -76,32 +111,56 @@ def matmul_act_stationary(x: jnp.ndarray, w: jnp.ndarray, *,
     kp = wp.shape[1]
     n_c = cp // bc
 
+    has_sb = scale is not None or bias is not None
+    has_res = residual is not None
+    operands = [xp, wp]
+    in_specs = [
+        # resident: index map ignores (k, c) -> fetched once per m block
+        pl.BlockSpec((bm, cp), lambda i, j, l: (i, 0)),
+        # streamed weight tiles
+        pl.BlockSpec((bc, bk), lambda i, j, l: (l, j)),
+    ]
+    if has_sb:
+        operands.append(_pack_scale_bias(scale, bias, k, bk))
+        in_specs.append(pl.BlockSpec((2, bk), lambda i, j, l: (0, j)))
+    if has_res:
+        assert residual.shape == (m, k), (residual.shape, (m, k))
+        operands.append(_pad_to(_pad_to(residual, 0, bm), 1, bk))
+        in_specs.append(pl.BlockSpec((bm, bk), lambda i, j, l: (i, j)))
+
     out = pl.pallas_call(
-        functools.partial(_mm_act_stationary_kernel, n_c=n_c, bc=bc),
+        functools.partial(_mm_act_stationary_kernel, n_c=n_c, bc=bc,
+                          has_sb=has_sb, has_res=has_res, relu=relu),
         grid=(mp // bm, kp // bk, n_c),
-        in_specs=[
-            # resident: index map ignores (k, c) -> fetched once per m block
-            pl.BlockSpec((bm, cp), lambda i, j, l: (i, 0)),
-            # streamed weight tiles
-            pl.BlockSpec((bc, bk), lambda i, j, l: (l, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bk), lambda i, j, l: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, kp), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
         interpret=interpret,
-    )(xp, wp)
+    )(*operands)
     return out[:m, :k]
 
 
 # ---------------------------- weight-stationary ------------------------------
-def _mm_weight_stationary_kernel(x_ref, w_ref, o_ref):
+def _mm_weight_stationary_kernel(*refs, has_sb: bool, has_res: bool,
+                                 relu: bool):
     """grid = (K/bk,); x fully resident; each weight block fetched once."""
-    o_ref[...] = jnp.dot(x_ref[...], w_ref[...],
-                         preferred_element_type=jnp.float32).astype(o_ref.dtype)
+    it = iter(refs)
+    x_ref, w_ref = next(it), next(it)
+    sb_ref = next(it) if has_sb else None
+    res_ref = next(it) if has_res else None
+    o_ref = next(it)
+    y = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = _epilogue(y, sb_ref, res_ref, relu).astype(o_ref.dtype)
 
 
 def matmul_weight_stationary(x: jnp.ndarray, w: jnp.ndarray, *,
-                             bk: int = BK, interpret: bool = True) -> jnp.ndarray:
+                             bk: int = BK,
+                             scale: jnp.ndarray | None = None,
+                             bias: jnp.ndarray | None = None,
+                             relu: bool = False,
+                             residual: jnp.ndarray | None = None,
+                             interpret: bool = True) -> jnp.ndarray:
     """(M, C) @ (C, K) with small M: the decode GEMV-like shape."""
     m, c = x.shape
     c2, k = w.shape
@@ -109,25 +168,39 @@ def matmul_weight_stationary(x: jnp.ndarray, w: jnp.ndarray, *,
     bk = min(bk, k)
     wp = _pad_to(w, 1, bk)
     kp = wp.shape[1]
+
+    has_sb = scale is not None or bias is not None
+    has_res = residual is not None
+    operands = [x, wp]
+    in_specs = [
+        pl.BlockSpec((m, c), lambda j: (0, 0)),     # resident activations
+        pl.BlockSpec((c, bk), lambda j: (0, j)),    # weights stream once
+    ]
+    if has_sb:
+        operands.append(_pack_scale_bias(scale, bias, k, bk))
+        in_specs.append(pl.BlockSpec((2, bk), lambda j: (0, j)))
+    if has_res:
+        assert residual.shape == (m, k), (residual.shape, (m, k))
+        operands.append(_pad_to(residual, 1, bk))
+        in_specs.append(pl.BlockSpec((m, bk), lambda j: (0, j)))
+
     out = pl.pallas_call(
-        _mm_weight_stationary_kernel,
+        functools.partial(_mm_weight_stationary_kernel, has_sb=has_sb,
+                          has_res=has_res, relu=relu),
         grid=(kp // bk,),
-        in_specs=[
-            pl.BlockSpec((m, c), lambda j: (0, 0)),     # resident activations
-            pl.BlockSpec((c, bk), lambda j: (0, j)),    # weights stream once
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((m, bk), lambda j: (0, j)),
         out_shape=jax.ShapeDtypeStruct((m, kp), x.dtype),
         interpret=interpret,
-    )(x, wp)
+    )(*operands)
     return out[:, :k]
 
 
 def matmul(x: jnp.ndarray, w: jnp.ndarray, *, interpret: bool = True,
-           stationarity: Stationarity | None = None) -> jnp.ndarray:
+           stationarity: Stationarity | None = None, **epilogue) -> jnp.ndarray:
     """CARLA-style reconfigurable GEMM: pick residency from the M extent."""
     if stationarity is None:
         stationarity = select_stationarity(x.shape[0])
     if stationarity == Stationarity.WEIGHT_STATIONARY:
-        return matmul_weight_stationary(x, w, interpret=interpret)
-    return matmul_act_stationary(x, w, interpret=interpret)
+        return matmul_weight_stationary(x, w, interpret=interpret, **epilogue)
+    return matmul_act_stationary(x, w, interpret=interpret, **epilogue)

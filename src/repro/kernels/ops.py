@@ -10,6 +10,13 @@
 Mode selection (which dataflow/stationarity) is orthogonal to ``impl`` and
 always follows ``core.modes`` — the software twin of CARLA's controller.
 
+``conv2d``/``conv1x1``/``gemm`` accept an ``epilogue=`` (``core.fuse.Epilogue``):
+folded-BN scale/bias, residual add, and ReLU are applied inside the kernel's
+flush step, so the output feature map is written to HBM exactly once instead
+of round-tripping once per element-wise op.  Telemetry spans record which
+epilogue was fused (``epilogue=`` attr) and the HBM bytes the fusion saved
+vs. the unfused op sequence (``epilogue_hbm_saved``).
+
 Every public entry point is telemetry-instrumented: when the global tracer is
 enabled (``observability.trace``), the dispatch records which mode the
 controller picked, operand shapes/bytes, FLOPs, and wall time under
@@ -24,6 +31,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.fuse import Epilogue
 from repro.core.modes import Stationarity, select_stationarity
 from repro.observability import trace
 from . import ref as _ref
@@ -33,6 +41,8 @@ from .matmul import (
     matmul_act_stationary,
     matmul_weight_stationary,
 )
+
+_NO_EPILOGUE = Epilogue()
 
 
 def _on_tpu() -> bool:
@@ -46,56 +56,84 @@ def _resolve(impl: str) -> str:
 
 
 def _nbytes(*arrays) -> int:
-    return sum(a.size * a.dtype.itemsize for a in arrays)
+    return sum(a.size * a.dtype.itemsize for a in arrays if a is not None)
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "padding", "impl"))
-def _conv2d_jit(x, w, *, stride: int = 1, padding: int = 0,
+def _epilogue_attrs(sp, ep: Epilogue, out) -> None:
+    """Record the fused-epilogue ledger on a kernel/dispatch span."""
+    sp.attrs["epilogue"] = ep.tag
+    if ep.n_fused_ops:
+        # Each fused element-wise pass would have read+written the full
+        # output feature map through HBM; the fused flush does neither.
+        sp.attrs["epilogue_hbm_saved"] = \
+            2 * ep.n_fused_ops * out.size * out.dtype.itemsize
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("stride", "padding", "impl", "relu"))
+def _conv2d_jit(x, w, scale=None, bias=None, residual=None, *,
+                relu: bool = False, stride: int = 1, padding: int = 0,
                 impl: str = "auto"):
     if _resolve(impl) == "pallas":
         return _conv2d_pallas(x, w, stride=stride, padding=padding,
-                              interpret=not _on_tpu())
-    return _ref.conv2d_ref(x, w, stride=stride, padding=padding).astype(x.dtype)
+                              scale=scale, bias=bias, relu=relu,
+                              residual=residual, interpret=not _on_tpu())
+    return _ref.conv2d_ref(x, w, stride=stride, padding=padding, scale=scale,
+                           bias=bias, relu=relu,
+                           residual=residual).astype(x.dtype)
 
 
-def conv2d(x, w, *, stride: int = 1, padding: int = 0, impl: str = "auto"):
+def conv2d(x, w, *, stride: int = 1, padding: int = 0, impl: str = "auto",
+           epilogue: Epilogue | None = None):
     """General NHWC conv; CARLA 3x3/7x7 serial-accumulation dataflow."""
+    ep = epilogue or _NO_EPILOGUE
     if not trace.enabled():
-        return _conv2d_jit(x, w, stride=stride, padding=padding, impl=impl)
+        return _conv2d_jit(x, w, ep.scale, ep.bias, ep.residual, relu=ep.relu,
+                           stride=stride, padding=padding, impl=impl)
     fh, fw, _, k = w.shape
     with trace.span("kernels.conv2d", impl=_resolve(impl),
                     x_shape=list(x.shape), w_shape=list(w.shape),
                     stride=stride, padding=padding,
                     dtype=str(x.dtype)) as sp:
-        out = _conv2d_jit(x, w, stride=stride, padding=padding, impl=impl)
+        out = _conv2d_jit(x, w, ep.scale, ep.bias, ep.residual, relu=ep.relu,
+                          stride=stride, padding=padding, impl=impl)
         jax.block_until_ready(out)
         b, oh, ow, _ = out.shape
         sp.attrs["flops"] = 2 * b * oh * ow * k * fh * fw * x.shape[-1]
-        sp.attrs["bytes_touched"] = _nbytes(x, w, out)
+        sp.attrs["bytes_touched"] = _nbytes(x, w, out, ep.scale, ep.bias,
+                                            ep.residual)
+        _epilogue_attrs(sp, ep, out)
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "impl"))
-def _conv1x1_jit(x, w, *, stride: int = 1, impl: str = "auto"):
+@functools.partial(jax.jit, static_argnames=("stride", "impl", "relu"))
+def _conv1x1_jit(x, w, scale=None, bias=None, residual=None, *,
+                 relu: bool = False, stride: int = 1, impl: str = "auto"):
     if stride != 1:
         x = x[:, ::stride, ::stride, :]
     b, h, wd, c = x.shape
     k = w.shape[-1]
     xf = x.reshape(b * h * wd, c)
+    rf = residual.reshape(b * h * wd, k) if residual is not None else None
     if _resolve(impl) == "pallas":
         st = select_stationarity(xf.shape[0])
         fn = (matmul_weight_stationary if st == Stationarity.WEIGHT_STATIONARY
               else matmul_act_stationary)
-        out = fn(xf, w, interpret=not _on_tpu())
+        out = fn(xf, w, scale=scale, bias=bias, relu=relu, residual=rf,
+                 interpret=not _on_tpu())
     else:
-        out = _ref.matmul_ref(xf, w).astype(x.dtype)
+        out = _ref.matmul_ref(xf, w, scale=scale, bias=bias, relu=relu,
+                              residual=rf).astype(x.dtype)
     return out.reshape(b, h, wd, k)
 
 
-def conv1x1(x, w, *, stride: int = 1, impl: str = "auto"):
+def conv1x1(x, w, *, stride: int = 1, impl: str = "auto",
+            epilogue: Epilogue | None = None):
     """Pointwise conv via the dual-stationarity GEMM (paper §III.B/C)."""
+    ep = epilogue or _NO_EPILOGUE
     if not trace.enabled():
-        return _conv1x1_jit(x, w, stride=stride, impl=impl)
+        return _conv1x1_jit(x, w, ep.scale, ep.bias, ep.residual, relu=ep.relu,
+                            stride=stride, impl=impl)
     b, h, wd, c = x.shape
     rows = b * -(-h // stride) * -(-wd // stride)   # x[:, ::s, ::s] row count
     st = select_stationarity(rows)
@@ -103,37 +141,52 @@ def conv1x1(x, w, *, stride: int = 1, impl: str = "auto"):
                     x_shape=list(x.shape), w_shape=list(w.shape),
                     stride=stride, stationarity=st.value,
                     dtype=str(x.dtype)) as sp:
-        out = _conv1x1_jit(x, w, stride=stride, impl=impl)
+        out = _conv1x1_jit(x, w, ep.scale, ep.bias, ep.residual, relu=ep.relu,
+                           stride=stride, impl=impl)
         jax.block_until_ready(out)
         sp.attrs["flops"] = 2 * rows * c * w.shape[-1]
-        sp.attrs["bytes_touched"] = _nbytes(x, w, out)
+        # A strided 1x1 subsamples BEFORE the GEMM, so only the strided view
+        # of the input is ever read — count those rows, not the full fmap.
+        sp.attrs["bytes_touched"] = (rows * c * x.dtype.itemsize
+                                     + _nbytes(w, out, ep.scale, ep.bias,
+                                               ep.residual))
+        _epilogue_attrs(sp, ep, out)
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("impl", "stationarity"))
-def _gemm_jit(x, w, *, impl: str = "auto",
+@functools.partial(jax.jit, static_argnames=("impl", "stationarity", "relu"))
+def _gemm_jit(x, w, scale=None, bias=None, residual=None, *,
+              relu: bool = False, impl: str = "auto",
               stationarity: Stationarity | None = None):
     if _resolve(impl) == "pallas":
         st = stationarity or select_stationarity(x.shape[0])
         fn = (matmul_weight_stationary if st == Stationarity.WEIGHT_STATIONARY
               else matmul_act_stationary)
-        return fn(x, w, interpret=not _on_tpu())
-    return _ref.matmul_ref(x, w).astype(x.dtype)
+        return fn(x, w, scale=scale, bias=bias, relu=relu, residual=residual,
+                  interpret=not _on_tpu())
+    return _ref.matmul_ref(x, w, scale=scale, bias=bias, relu=relu,
+                           residual=residual).astype(x.dtype)
 
 
 def gemm(x, w, *, impl: str = "auto",
-         stationarity: Stationarity | None = None):
+         stationarity: Stationarity | None = None,
+         epilogue: Epilogue | None = None):
     """(M, C) @ (C, K) with CARLA stationarity planning."""
+    ep = epilogue or _NO_EPILOGUE
     if not trace.enabled():
-        return _gemm_jit(x, w, impl=impl, stationarity=stationarity)
+        return _gemm_jit(x, w, ep.scale, ep.bias, ep.residual, relu=ep.relu,
+                         impl=impl, stationarity=stationarity)
     st = stationarity or select_stationarity(x.shape[0])
     with trace.span("kernels.gemm", impl=_resolve(impl),
                     x_shape=list(x.shape), w_shape=list(w.shape),
                     stationarity=st.value, dtype=str(x.dtype)) as sp:
-        out = _gemm_jit(x, w, impl=impl, stationarity=stationarity)
+        out = _gemm_jit(x, w, ep.scale, ep.bias, ep.residual, relu=ep.relu,
+                        impl=impl, stationarity=stationarity)
         jax.block_until_ready(out)
         sp.attrs["flops"] = 2 * x.shape[0] * x.shape[1] * w.shape[-1]
-        sp.attrs["bytes_touched"] = _nbytes(x, w, out)
+        sp.attrs["bytes_touched"] = _nbytes(x, w, out, ep.scale, ep.bias,
+                                            ep.residual)
+        _epilogue_attrs(sp, ep, out)
     return out
 
 

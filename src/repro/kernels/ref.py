@@ -10,29 +10,54 @@ import jax.numpy as jnp
 from jax import lax
 
 
+def epilogue_ref(y: jnp.ndarray, scale=None, bias=None, relu: bool = False,
+                 residual=None) -> jnp.ndarray:
+    """The epilogue the fused kernels apply at flush, in fp32, unfused.
+
+    Order matches the kernels (and the ResNet bottleneck):
+    scale/bias -> residual add -> ReLU.
+    """
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if residual is not None:
+        y = y + residual.astype(jnp.float32)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
 def conv2d_ref(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
-               padding: int = 0) -> jnp.ndarray:
+               padding: int = 0, *, scale=None, bias=None, relu: bool = False,
+               residual=None) -> jnp.ndarray:
     """x: (B, H, W, C), w: (FH, FW, C, K) -> (B, OH, OW, K). fp32 accumulate."""
-    return lax.conv_general_dilated(
+    y = lax.conv_general_dilated(
         x.astype(jnp.float32), w.astype(jnp.float32),
         window_strides=(stride, stride),
         padding=[(padding, padding), (padding, padding)],
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
     )
+    return epilogue_ref(y, scale, bias, relu, residual)
 
 
-def conv1x1_ref(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+def conv1x1_ref(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, *,
+                scale=None, bias=None, relu: bool = False,
+                residual=None) -> jnp.ndarray:
     """x: (B, H, W, C), w: (C, K); pointwise conv == GEMM over channels."""
     if stride != 1:
         x = x[:, ::stride, ::stride, :]
-    return jnp.einsum("bhwc,ck->bhwk", x.astype(jnp.float32),
-                      w.astype(jnp.float32))
+    y = jnp.einsum("bhwc,ck->bhwk", x.astype(jnp.float32),
+                   w.astype(jnp.float32))
+    return epilogue_ref(y, scale, bias, relu, residual)
 
 
-def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray, *, scale=None, bias=None,
+               relu: bool = False, residual=None) -> jnp.ndarray:
     """x: (M, C), w: (C, K) -> (M, K) with fp32 accumulation."""
-    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
-                   preferred_element_type=jnp.float32)
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    return epilogue_ref(y, scale, bias, relu, residual)
 
 
 def conv1d_causal_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:

@@ -5,6 +5,13 @@ models exercises all four dataflows (7x7 decomposed, 3x3 serial accumulation,
 1x1 feature-stationary, 1x1 weight-stationary).  ``network_plan`` returns the
 per-layer mode + analytic cost — the exact tables behind the paper's Figs 8-10.
 
+The forwards run **fused by default**: inference-folded BN (scale/bias), ReLU,
+and the bottleneck residual add ride the kernels' flush epilogue
+(``core.fuse.Epilogue``), so each conv output crosses HBM exactly once — in
+particular the shortcut add is fused into the block's last 1x1 conv.
+``fused=False`` runs the same math as separate element-wise ops (the parity
+oracle, and the unfused baseline for the bytes-saved benchmarks).
+
 Supports a ``width`` scale factor so smoke tests can instantiate the same
 topology at reduced width, and channel-keep masks for the structured-sparse
 variant (§IV.A).
@@ -15,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.carla import carla_conv, plan_conv
+from repro.core.fuse import Epilogue
 
 
 def _conv_init(key, fl: int, cin: int, k: int):
@@ -30,6 +38,25 @@ def _bn_init(k: int):
 def _bn(params, x):
     """Inference-folded batch norm (scale+shift; stats folded into weights)."""
     return x * params["scale"] + params["bias"]
+
+
+def _conv_bn(x, w, bn, *, fused: bool, relu: bool = False,
+             residual=None, stride: int = 1, padding: int = 0,
+             impl: str = "auto"):
+    """conv + folded-BN (+residual) (+ReLU), fused into the kernel flush or
+    as the unfused op-by-op sequence (the parity/bytes baseline)."""
+    if fused:
+        ep = Epilogue(scale=None if bn is None else bn["scale"],
+                      bias=None if bn is None else bn["bias"],
+                      relu=relu, residual=residual)
+        return carla_conv(x, w, stride=stride, padding=padding, impl=impl,
+                          epilogue=ep)
+    y = carla_conv(x, w, stride=stride, padding=padding, impl=impl)
+    if bn is not None:
+        y = _bn(bn, y)
+    if residual is not None:
+        y = y + residual
+    return jax.nn.relu(y) if relu else y
 
 
 # ------------------------------- ResNet-50 -----------------------------------
@@ -67,12 +94,14 @@ def resnet50_init(key, *, width: float = 1.0, num_classes: int = 1000,
     return params
 
 
-def resnet50_apply(params, x, *, impl: str = "auto"):
-    """x: (B, H, W, 3) -> (B, num_classes).  All convs via carla_conv."""
-    relu = jax.nn.relu
-    x = relu(_bn(params["bn1"],
-                 carla_conv(x, params["conv1"], stride=2, padding=3,
-                            impl=impl)))
+def resnet50_apply(params, x, *, impl: str = "auto", fused: bool = True):
+    """x: (B, H, W, 3) -> (B, num_classes).  All convs via carla_conv.
+
+    fused=True (default): BN + ReLU (+ the bottleneck residual add, fused
+    into the last 1x1 conv of each block) ride the kernel flush epilogue.
+    """
+    x = _conv_bn(x, params["conv1"], params["bn1"], fused=fused, relu=True,
+                 stride=2, padding=3, impl=impl)
     # 3x3/2 maxpool
     x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
                               (1, 2, 2, 1), "SAME")
@@ -83,14 +112,15 @@ def resnet50_apply(params, x, *, impl: str = "auto"):
             stride = 2 if (b == 0 and gname != "conv2") else 1
             sc = x
             if "proj" in blk:
-                sc = _bn(blk["bnp"], carla_conv(x, blk["proj"], stride=stride,
-                                                impl=impl))
-            h = relu(_bn(blk["bn1"], carla_conv(x, blk["c1"], stride=stride,
-                                                impl=impl)))
-            h = relu(_bn(blk["bn2"], carla_conv(h, blk["c2"], padding=1,
-                                                impl=impl)))
-            h = _bn(blk["bn3"], carla_conv(h, blk["c3"], impl=impl))
-            x = relu(h + sc)
+                sc = _conv_bn(x, blk["proj"], blk["bnp"], fused=fused,
+                              stride=stride, impl=impl)
+            h = _conv_bn(x, blk["c1"], blk["bn1"], fused=fused, relu=True,
+                         stride=stride, impl=impl)
+            h = _conv_bn(h, blk["c2"], blk["bn2"], fused=fused, relu=True,
+                         padding=1, impl=impl)
+            # residual add fused into the block's last 1x1 conv
+            x = _conv_bn(h, blk["c3"], blk["bn3"], fused=fused, relu=True,
+                         residual=sc, impl=impl)
     x = jnp.mean(x, axis=(1, 2))
     return x @ params["fc"]["w"].astype(x.dtype)
 
@@ -113,11 +143,11 @@ def vgg16_init(key, *, width: float = 1.0, num_classes: int = 1000):
     return params
 
 
-def vgg16_apply(params, x, *, impl: str = "auto"):
+def vgg16_apply(params, x, *, impl: str = "auto", fused: bool = True):
     for gi, (c, n) in enumerate(VGG_SPEC):
         for li in range(n):
-            x = jax.nn.relu(carla_conv(x, params[f"g{gi}_c{li}"], padding=1,
-                                       impl=impl))
+            x = _conv_bn(x, params[f"g{gi}_c{li}"], None, fused=fused,
+                         relu=True, padding=1, impl=impl)
         x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
                                   (1, 2, 2, 1), "VALID")
     x = jnp.mean(x, axis=(1, 2))

@@ -42,6 +42,9 @@ class ReconRow:
     measured_bytes_mb: float
     achieved_gflops: float
     measured_util: float        # achieved / peak_gflops
+    # fused epilogue (``none`` when the dispatch ran without one)
+    epilogue: str = "none"
+    fused_saved_mb: float = 0.0  # HBM round-trips the fused flush removed
 
     @property
     def speed_ratio(self) -> float:
@@ -85,6 +88,8 @@ def reconcile(spans: list[Span],
             measured_bytes_mb=a.get("bytes_touched", 0) / 1e6,
             achieved_gflops=gflops,
             measured_util=gflops / peak if peak else 0.0,
+            epilogue=a.get("epilogue", "none"),
+            fused_saved_mb=a.get("epilogue_hbm_saved", 0) / 1e6,
         ))
     return out
 
@@ -101,6 +106,7 @@ def totals(rows: list[ReconRow]) -> dict:
         "analytic_dram_mb": sum(r.analytic_dram_mb for r in rows),
         "measured_ms_per_image": me_ms,
         "measured_bytes_mb": sum(r.measured_bytes_mb for r in rows),
+        "fused_saved_mb": sum(r.fused_saved_mb for r in rows),
         "speed_ratio": me_ms / an_ms if an_ms else float("inf"),
     }
 
@@ -108,14 +114,15 @@ def totals(rows: list[ReconRow]) -> dict:
 def format_table(rows: list[ReconRow]) -> str:
     """Fixed-width text table: analytic columns left, measured columns right."""
     headers = ["layer", "dataflow", "cycles", "an.ms", "an.MB", "PUF%",
-               "B", "ms", "MB", "GFLOP/s", "util%", "x-ASIC"]
+               "B", "ms", "MB", "GFLOP/s", "util%", "x-ASIC",
+               "epilogue", "savedMB"]
     cells = [[
         r.layer, r.dataflow.replace("_", "-"),
         f"{r.analytic_cycles:,}", f"{r.analytic_ms:7.3f}",
         f"{r.analytic_dram_mb:6.2f}", f"{r.analytic_puf * 100:5.1f}",
         str(r.batch), f"{r.measured_ms:8.2f}", f"{r.measured_bytes_mb:6.2f}",
         f"{r.achieved_gflops:7.2f}", f"{r.measured_util * 100:5.1f}",
-        f"{r.speed_ratio:6.2f}",
+        f"{r.speed_ratio:6.2f}", r.epilogue, f"{r.fused_saved_mb:6.2f}",
     ] for r in rows]
     widths = [max(len(h), *(len(c[i]) for c in cells)) if cells else len(h)
               for i, h in enumerate(headers)]

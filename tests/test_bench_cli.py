@@ -41,8 +41,15 @@ def test_benchmarks_run_smoke_cli_and_regression_gate(tmp_path):
     assert "FAIL" not in r.stdout
     with open(bench) as f:
         rec = json.load(f)
-    assert rec["smoke"] and list(rec["networks"]) == ["smoke"]
+    assert rec["smoke"]
+    assert list(rec["networks"]) == ["smoke", "smoke_fused"]
     assert len(rec["networks"]["smoke"]["layers"]) == 4
+    # the fused run records the per-block HBM delta, and every block saves
+    fd = rec["fused_delta"]["smoke"]
+    assert len(fd["blocks"]) == 4
+    assert all(b["fused_bytes_mb"] < b["unfused_bytes_mb"]
+               for b in fd["blocks"])
+    assert "fused epilogue [smoke]" in r.stdout
 
     # the gate passes against the record itself...
     r = _run("benchmarks.check_regression", "--baseline", bench,
@@ -54,3 +61,16 @@ def test_benchmarks_run_smoke_cli_and_regression_gate(tmp_path):
              "--candidate", bench, "--inject-slowdown", "10")
     assert r.returncode != 0
     assert "PERF REGRESSION" in r.stdout
+
+
+@pytest.mark.slow
+def test_regression_gate_smoke_against_committed_baseline():
+    """Tier-1 perf gate: fresh smoke measurement vs the committed BENCH_8
+    baseline — catches fused-path perf/bytes regressions at merge time."""
+    assert os.path.exists(os.path.join(REPO, "BENCH_8.json")), \
+        "BENCH_8.json baseline missing (benchmarks.run --bench-json)"
+    r = _run("benchmarks.check_regression", "--smoke")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "perf gate: PASS" in r.stdout
+    # the smoke filter really selected the smoke nets, fused included
+    assert "smoke_fused:" in r.stdout

@@ -315,16 +315,27 @@ def test_check_regression_flags_structural_changes():
 
 
 def test_committed_baseline_is_self_consistent():
-    """The committed BENCH_7.json must pass the gate against itself."""
+    """The committed BENCH_8.json must pass the gate against itself."""
     from benchmarks.check_regression import DEFAULT_BASELINE, compare, load
 
     base = load(DEFAULT_BASELINE)
     assert compare(base, base) == []
-    assert set(base["networks"]) == {"resnet50", "vgg16"}
+    # each net measured unfused and fused, plus the smoke sets for tier-1 CI
+    assert set(base["networks"]) == {"smoke", "smoke_fused",
+                                     "resnet50", "resnet50_fused",
+                                     "vgg16", "vgg16_fused"}
     assert len(base["networks"]["resnet50"]["layers"]) == 49
     assert len(base["networks"]["vgg16"]["layers"]) == 13
-    for net in base["networks"].values():
+    for name, net in base["networks"].items():
+        fused = name.endswith("_fused")
         for layer in net["layers"]:
             assert layer["measured_ms"] > 0
             assert layer["gflops"] > 0
             assert 0 < layer["util_vs_peak"] <= 1
+            assert (layer["epilogue"] != "none") == fused
+        assert (net["total_fused_saved_mb"] > 0) == fused
+    # the fused-path invariant holds in the committed record itself
+    assert set(base["fused_delta"]) == {"smoke", "resnet50", "vgg16"}
+    for fd in base["fused_delta"].values():
+        for blk in fd["blocks"]:
+            assert blk["fused_bytes_mb"] < blk["unfused_bytes_mb"]
