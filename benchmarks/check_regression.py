@@ -1,6 +1,6 @@
 """Perf-regression gate: compare a bench run against the committed baseline.
 
-The baseline (``BENCH_8.json``, written by ``benchmarks/run.py
+The baseline (``BENCH_9.json``, written by ``benchmarks/run.py
 --bench-json``) records per-layer measured wall ms, achieved GFLOP/s, and
 utilization for the ResNet-50/VGG-16 layer sets — both unfused and through
 the fused-epilogue path (``<net>_fused`` entries) — plus the per-bottleneck-
@@ -10,6 +10,19 @@ any layer, or a network total, slows past the tolerance band — so CI can
 gate merges on measured performance, not just correctness.  The fused-path
 invariant (every block touches strictly fewer bytes fused than unfused) is
 checked exactly, not banded.
+
+Two PR 9 checks ride along:
+
+* **tuned-vs-default band** — when the candidate record carries a
+  ``tuning`` section (``--bench-json --tuned``), every tuned shape key must
+  run no slower through its tuned tiles than through the hardcoded PR 8
+  defaults, beyond ``TUNED_TOL``/``TUNED_ABS_MS``.  The autotuner picked the
+  winner empirically on this machine, so a systematic inversion means the
+  committed table has gone stale in a way the hash check cannot see.
+* **table staleness** — committed tuned tables embed the kernel-signature
+  hash of the Pallas sources they were tuned against; if any table's hash
+  no longer matches the current sources, the gate fails and names the table
+  (re-run ``benchmarks.autotune --commit`` after kernel changes).
 
 ``--smoke`` compares only the ``smoke*`` networks (measuring them fresh when
 no ``--candidate`` is given) — the tier-1 suite runs this against the
@@ -34,7 +47,7 @@ import os
 import sys
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-DEFAULT_BASELINE = os.path.join(REPO_ROOT, "BENCH_8.json")
+DEFAULT_BASELINE = os.path.join(REPO_ROOT, "BENCH_9.json")
 
 LAYER_TOL = 0.75     # per-layer band: single-layer walls are the noisiest
 TOTAL_TOL = 0.35     # network-total band
@@ -44,6 +57,11 @@ UTIL_TOL = 0.50      # relative drop allowed in mean util-vs-peak
 # band would flake; a real regression on a layer that matters clears this.
 LAYER_ABS_MS = 0.5
 TOTAL_ABS_MS = 2.0
+# tuned-vs-default band: both sides are fresh single-shot pallas dispatches,
+# so per-key jitter is large; the tuner already chose the winner empirically
+# and only a systematic inversion (stale table) should trip this.
+TUNED_TOL = 0.5
+TUNED_ABS_MS = 5.0
 
 
 def load(path: str) -> dict:
@@ -62,7 +80,43 @@ def inject_slowdown(record: dict, factor: float) -> dict:
         for layer in net["layers"]:
             layer["measured_ms"] *= factor
             layer["gflops"] /= factor
+    for delta in rec.get("tuning", {}).values():
+        for entry in delta["layers"]:
+            if entry.get("tuned"):
+                entry["tuned_ms"] *= factor
     return rec
+
+
+def check_tuning(cand: dict, *, tuned_tol: float = TUNED_TOL) -> list[str]:
+    """Tuned tiles must never lose to the PR 8 defaults beyond the band."""
+    problems: list[str] = []
+    for net, delta in cand.get("tuning", {}).items():
+        for entry in delta.get("layers", []):
+            if not entry.get("tuned"):
+                continue
+            d, t = entry["default_ms"], entry["tuned_ms"]
+            if t > d * (1 + tuned_tol) + TUNED_ABS_MS:
+                problems.append(
+                    f"{net}/{entry['layer']} [{entry['tile_config']}]: tuned "
+                    f"{t:.2f} ms vs default {d:.2f} ms "
+                    f"(+{(t / d - 1) * 100:.0f}% > {tuned_tol * 100:.0f}%)")
+    return problems
+
+
+def check_stale_tables() -> list[str]:
+    """Committed tuned tables must match the current kernel-signature hash."""
+    from repro.core import autotune
+    autotune.reset()
+    try:
+        stale = autotune.stale_tables()
+    finally:
+        autotune.reset()
+    return [
+        f"stale tuned table {s['path']}: tuned against kernel hash "
+        f"{s['table_hash']}, sources now hash {s['current_hash']} — re-run "
+        "benchmarks.autotune --commit"
+        for s in stale
+    ]
 
 
 def compare(base: dict, cand: dict, *, layer_tol: float = LAYER_TOL,
@@ -128,6 +182,10 @@ def main() -> None:
                     help="per-layer relative slowdown band")
     ap.add_argument("--total-tolerance", type=float, default=TOTAL_TOL)
     ap.add_argument("--util-tolerance", type=float, default=UTIL_TOL)
+    ap.add_argument("--tuned-tolerance", type=float, default=TUNED_TOL,
+                    help="band for the tuned-vs-default check")
+    ap.add_argument("--skip-stale-check", action="store_true",
+                    help="skip the committed-table kernel-hash check")
     ap.add_argument("--inject-slowdown", type=float, default=1.0,
                     help="scale candidate times by this factor (self-test)")
     ap.add_argument("--smoke", action="store_true",
@@ -146,6 +204,8 @@ def main() -> None:
         base["fused_delta"] = {k: v
                                for k, v in base.get("fused_delta", {}).items()
                                if k.startswith("smoke")}
+        base["tuning"] = {k: v for k, v in base.get("tuning", {}).items()
+                          if k.startswith("smoke")}
         if not base["networks"]:
             raise SystemExit(f"{args.baseline}: no smoke networks to compare "
                              "(re-generate with benchmarks.run --bench-json)")
@@ -158,7 +218,8 @@ def main() -> None:
         print(f"measuring {'/'.join(nets)} fresh "
               f"(reps={reps}, impl={base.get('impl', 'auto')})...")
         cand = collect_bench(nets, batch=base.get("batch", 1), reps=reps,
-                             impl=base.get("impl", "auto"), smoke=smoke)
+                             impl=base.get("impl", "auto"), smoke=smoke,
+                             tuned=base.get("tuned", False))
     if args.inject_slowdown != 1.0:
         cand = inject_slowdown(cand, args.inject_slowdown)
         print(f"(injected {args.inject_slowdown}x slowdown into candidate)")
@@ -171,12 +232,20 @@ def main() -> None:
     problems = compare(base, cand, layer_tol=args.tolerance,
                        total_tol=args.total_tolerance,
                        util_tol=args.util_tolerance)
+    problems += check_tuning(cand, tuned_tol=args.tuned_tolerance)
+    if not args.skip_stale_check:
+        problems += check_stale_tables()
     for net, b in sorted(base["networks"].items()):
         c = cand["networks"].get(net)
         if c:
             print(f"{net}: baseline {b['total_measured_ms']:.1f} ms -> "
                   f"candidate {c['total_measured_ms']:.1f} ms "
                   f"({len(b['layers'])} layers)")
+    for net, delta in sorted(cand.get("tuning", {}).items()):
+        d, t = delta["total_default_ms"], delta["total_tuned_ms"]
+        print(f"{net} tuning: defaults {d:.1f} ms -> tuned {t:.1f} ms over "
+              f"{delta['keys_timed']} keys "
+              f"({delta['keys_missing']} untuned)")
     if problems:
         print(f"\nPERF REGRESSION ({len(problems)}):")
         for p in problems:

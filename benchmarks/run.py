@@ -1,13 +1,16 @@
 """Benchmark driver: one table per paper figure + kernel bench + roofline.
 
 Run:  PYTHONPATH=src python -m benchmarks.run  [--skip-kernels]
-          [--smoke] [--bench-json BENCH_8.json]
+          [--smoke] [--bench-json BENCH_9.json] [--tuned]
 
 ``--bench-json`` measures the ResNet-50/VGG-16 layer sets — unfused and
 through the fused-epilogue path — via traced ``carla_conv`` dispatches and
 writes the per-layer measured ms / GFLOP/s / utilization / bytes record that
 ``benchmarks/check_regression.py`` gates against, plus the per-bottleneck-
 block fused-vs-unfused HBM-bytes delta (``fused_delta``).
+``--tuned`` enables the empirical tuning cache (committed tables +
+``~/.cache/repro-autotune``) during the measurement and embeds the per-key
+tuned-vs-default deltas (``tuning``) that the regression gate bands.
 ``--smoke`` keeps everything in seconds: analytic tables + fidelity gate
 only, and the bench record (if requested) uses the tiny smoke layer set.
 """
@@ -43,6 +46,9 @@ def main() -> None:
                          "BENCH_*.json perf baseline here")
     ap.add_argument("--bench-reps", type=int, default=2,
                     help="traced reps per layer for --bench-json (best kept)")
+    ap.add_argument("--tuned", action="store_true",
+                    help="enable the tuning cache for --bench-json and embed "
+                         "the tuned-vs-default deltas")
     args = ap.parse_args()
 
     from . import paper_figures
@@ -92,7 +98,8 @@ def main() -> None:
                 else ["smoke", "smoke_fused",
                       "resnet50", "resnet50_fused", "vgg16", "vgg16_fused"])
         reps = 1 if args.smoke else args.bench_reps
-        record = collect_bench(nets, reps=reps, smoke=args.smoke)
+        record = collect_bench(nets, reps=reps, smoke=args.smoke,
+                               tuned=args.tuned)
         with open(args.bench_json, "w") as f:
             json.dump(record, f, indent=2)
             f.write("\n")
@@ -105,6 +112,11 @@ def main() -> None:
                   f"HBM round-trips saved over {len(fd['blocks'])} blocks, "
                   f"{fd['total_speedup']:.2f}x wall; min block saving "
                   f"{worst['saved_mb']:.2f} MB ({worst['block']})")
+        for net, delta in record.get("tuning", {}).items():
+            d, t = delta["total_default_ms"], delta["total_tuned_ms"]
+            print(f"tuning [{net}]: defaults {d:.1f} ms -> tuned {t:.1f} ms "
+                  f"({d / max(t, 1e-9):.2f}x) over {delta['keys_timed']} "
+                  f"shape keys ({delta['keys_missing']} untuned)")
 
     if not ok:
         sys.exit(1)

@@ -9,7 +9,14 @@ Runs every conv layer of ResNet-50 (and VGG-16 with --net vgg16) through
 
 Run:  PYTHONPATH=src python -m benchmarks.telemetry_report [--net resnet50]
           [--batch 1] [--reps 3] [--limit N] [--json out.json]
-          [--chrome out.trace.json] [--smoke] [--fused]
+          [--chrome out.trace.json] [--smoke] [--fused] [--tuned]
+
+``--tuned`` enables the empirical tuning cache (``core.autotune``) for the
+run: dispatches whose shape key hits a committed/user tuned table run with
+the measured tile sizes (and, for 1x1 layers, the measured stationarity),
+and the report's ``tile%`` / ``tiles`` columns show the padding-waste PUF
+analogue and which config actually ran — tuned-vs-default is visible per
+layer by diffing a ``--tuned`` report against a default one.
 
 ``--fused`` dispatches every layer with a fused epilogue (folded-BN
 scale/bias + ReLU, shortcut-add on bottleneck-closing 1x1s); the report's
@@ -38,7 +45,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import Epilogue, carla_conv, epilogue_dram_delta_bytes
+from repro.core import Epilogue, autotune, carla_conv, epilogue_dram_delta_bytes
 from repro.core.networks import (
     resnet50_conv_layers,
     smoke_conv_layers,
@@ -223,7 +230,8 @@ def collect_fused_delta(net: str, batch: int = 1, reps: int = 2,
 
 
 def collect_bench(nets: list[str], batch: int = 1, reps: int = 2,
-                  impl: str = "auto", smoke: bool = False) -> dict:
+                  impl: str = "auto", smoke: bool = False,
+                  tuned: bool = False) -> dict:
     """Measure the given layer sets and return the BENCH_*.json record.
 
     Per layer: measured wall ms (best of ``reps``), achieved GFLOP/s,
@@ -233,45 +241,69 @@ def collect_bench(nets: list[str], batch: int = 1, reps: int = 2,
     A net named ``<base>_fused`` measures ``<base>``'s layer set through the
     fused-epilogue path (and triggers the per-bottleneck-block fused-vs-
     unfused delta measurement, recorded under ``fused_delta``).
+
+    ``tuned=True`` enables the empirical tuning cache for the whole
+    measurement (span attrs record ``tuned``/``tile_config``/``tile_util``)
+    and additionally measures, per base net, every tuned shape key through
+    the pallas kernels with the tuned tiles vs the hardcoded defaults — the
+    ``tuning`` section ``check_regression.py`` gates on.
     """
     record: dict = {
-        "version": 2,
+        "version": 3,
         "backend": jax.default_backend(),
         "impl": impl,
         "batch": batch,
         "reps": reps,
         "smoke": smoke,
+        "tuned": tuned,
+        "kernel_hash": autotune.kernel_signature_hash(),
         "networks": {},
         "fused_delta": {},
+        "tuning": {},
     }
-    for net in nets:
-        fused = net.endswith(FUSED_SUFFIX)
-        base = net[:-len(FUSED_SUFFIX)] if fused else net
-        layers = NET_LAYERS[base]()
-        spans = run_network(layers, batch, reps, impl, fused=fused)
-        rows = reconcile(spans)
-        t = totals(rows)
-        record["networks"][net] = {
-            "total_measured_ms": t["measured_ms_per_image"],
-            "total_analytic_ms": t["analytic_ms"],
-            "speed_ratio": t["speed_ratio"],
-            "total_fused_saved_mb": t["fused_saved_mb"],
-            "layers": [{
-                "layer": r.layer,
-                "dataflow": r.dataflow,
-                "measured_ms": r.measured_ms,
-                "gflops": r.achieved_gflops,
-                "util_vs_peak": r.measured_util,
-                "analytic_ms": r.analytic_ms,
-                "analytic_puf": r.analytic_puf,
-                "epilogue": r.epilogue,
-                "bytes_mb": r.measured_bytes_mb,
-                "fused_saved_mb": r.fused_saved_mb,
-            } for r in rows],
-        }
-        if fused:
-            record["fused_delta"][base] = collect_fused_delta(
-                base, batch=batch, reps=reps, smoke=smoke)
+    prev_enabled = autotune.enabled()
+    if tuned:
+        autotune.enable()
+    try:
+        for net in nets:
+            fused = net.endswith(FUSED_SUFFIX)
+            base = net[:-len(FUSED_SUFFIX)] if fused else net
+            layers = NET_LAYERS[base]()
+            spans = run_network(layers, batch, reps, impl, fused=fused)
+            rows = reconcile(spans)
+            t = totals(rows)
+            record["networks"][net] = {
+                "total_measured_ms": t["measured_ms_per_image"],
+                "total_analytic_ms": t["analytic_ms"],
+                "speed_ratio": t["speed_ratio"],
+                "total_fused_saved_mb": t["fused_saved_mb"],
+                "layers": [{
+                    "layer": r.layer,
+                    "dataflow": r.dataflow,
+                    "measured_ms": r.measured_ms,
+                    "gflops": r.achieved_gflops,
+                    "util_vs_peak": r.measured_util,
+                    "analytic_ms": r.analytic_ms,
+                    "analytic_puf": r.analytic_puf,
+                    "epilogue": r.epilogue,
+                    "bytes_mb": r.measured_bytes_mb,
+                    "fused_saved_mb": r.fused_saved_mb,
+                    "tile_util": r.tile_util,
+                    "tuned": r.tuned,
+                    "tile_config": r.tile_config,
+                    "tuning_source": r.tuning_source,
+                } for r in rows],
+            }
+            if fused:
+                record["fused_delta"][base] = collect_fused_delta(
+                    base, batch=batch, reps=reps, smoke=smoke)
+            if tuned and base not in record["tuning"]:
+                from .autotune import collect_tuning_delta
+                record["tuning"][base] = collect_tuning_delta(
+                    base, batch=batch, reps=reps)
+    finally:
+        if tuned and not prev_enabled:
+            autotune.disable()
     return record
 
 
@@ -326,7 +358,13 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny layer set, 1 rep, no overhead check (seconds)")
     ap.add_argument("--skip-overhead", action="store_true")
+    ap.add_argument("--tuned", action="store_true",
+                    help="enable the tuning cache for the run (tile%%/tiles "
+                         "columns show what ran)")
     args = ap.parse_args()
+
+    if args.tuned:
+        autotune.enable()
 
     if args.smoke:
         net, reps, skip_overhead = "smoke", 1, True

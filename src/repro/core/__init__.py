@@ -1,4 +1,6 @@
 """CARLA core: the paper's contribution as composable JAX modules."""
+from . import autotune
+from .autotune import TileConfig, kernel_signature_hash
 from .carla import ConvPlan, carla_conv, plan_conv
 from .cost_model import (
     LayerCost,
@@ -27,9 +29,11 @@ from .networks import (
 
 __all__ = [
     "ConvLayer", "ConvPlan", "Dataflow", "Epilogue", "LayerCost",
-    "NetworkCost", "Stationarity", "apply_epilogue", "carla_conv",
+    "NetworkCost", "Stationarity", "TileConfig", "apply_epilogue",
+    "autotune", "carla_conv",
     "epilogue_dram_delta", "epilogue_dram_delta_bytes", "fold_bn",
-    "fold_bn_into_conv", "layer_cost", "network_cost", "plan_conv",
+    "fold_bn_into_conv", "kernel_signature_hash", "layer_cost",
+    "network_cost", "plan_conv",
     "resnet50_conv_layers", "resnet50_projection_shortcuts", "resnet50_cost",
     "select_dataflow", "select_stationarity", "smoke_conv_layers",
     "vgg16_conv_layers", "vgg16_cost",

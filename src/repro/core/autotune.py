@@ -1,0 +1,425 @@
+"""Empirical per-layer tuning cache — tile sizes and dataflow, keyed by shape.
+
+CARLA's controller reconfigures the dataflow per layer so PE utilization stays
+near 98% across every shape of ResNet-50/VGG-16 (paper §III).  The software
+twin reproduces the *selection rule* analytically (``core.modes``), but the
+Pallas kernels additionally have tile-size knobs the ASIC does not
+(``bm/bk/bc``), and the best setting is an empirical property of the execution
+backend, not of the rule.  This module is the persistence + lookup layer for
+an MMIE-style per-layer operating point chosen by measurement:
+
+  * **Key**: ``(op kind, layer shape, dtype, epilogue signature)`` rendered as
+    a flat string (backend lives in the table header, not the key).  1x1 convs
+    flatten to their GEMM shape so ``conv1x1`` and ``gemm`` share entries.
+  * **Entry**: the winning :class:`TileConfig` — tile sizes plus, for GEMM
+    shapes, the stationarity (dataflow) choice itself — with the measured
+    tuned/default wall times and where the entry came from (``table`` =
+    committed, ``cache`` = user cache dir, ``runtime`` = injected in-process).
+  * **Invalidation**: every table records ``kernel_signature_hash()`` — a hash
+    of the kernel sources (``conv2d.py``/``matmul.py``).  Entries whose hash
+    no longer matches are ignored, and committed tables that went stale fail
+    ``benchmarks/check_regression.py``.
+  * **Overhead contract**: ``enabled()`` is one module-attribute read (the
+    same discipline as ``observability.trace``); a lookup is one or two dict
+    hits.  Dispatch sites gate on ``enabled()`` first, so the disabled path
+    costs nothing.
+
+The search itself lives in ``benchmarks/autotune.py``; this module only
+defines keys, candidate generation (cost-model-seeded), the cache, and the
+``tile_util`` padding-waste metric (logical FLOPs / padded FLOPs — the TPU
+analogue of the paper's PUF).
+
+Sources, highest precedence first:
+  1. runtime entries injected via :func:`put` (tests, notebooks);
+  2. the user cache dir (``~/.cache/repro-autotune`` or
+     ``$REPRO_AUTOTUNE_CACHE``), written by ``benchmarks/autotune.py``;
+  3. committed tables under ``src/repro/kernels/tuned/`` (or
+     ``$REPRO_TUNED_TABLES_DIR``), produced with ``--commit``.
+
+Enable with :func:`enable` or ``REPRO_AUTOTUNE=1``.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from dataclasses import dataclass
+
+# ---------------------------------------------------------------------------
+# Tile configurations
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TileConfig:
+    """One operating point: tile sizes + (for GEMM shapes) the stationarity.
+
+    ``None`` fields mean "keep the kernel's default".  Frozen and hashable so
+    a config can ride through ``jax.jit`` as a static argument.
+    """
+
+    bm: int | None = None
+    bk: int | None = None
+    bc: int | None = None
+    stationarity: str | None = None   # modes.Stationarity.value, or None
+
+    @property
+    def short(self) -> str:
+        """Compact span-attribute label, e.g. ``"bm64/bk128/bc256/as"``."""
+        parts = [f"{n}{v}" for n, v in
+                 (("bm", self.bm), ("bk", self.bk), ("bc", self.bc))
+                 if v is not None]
+        if self.stationarity:
+            parts.append("ws" if self.stationarity == "weight_stationary"
+                         else "as")
+        return "/".join(parts) if parts else "default"
+
+    def to_dict(self) -> dict:
+        return {k: v for k, v in (("bm", self.bm), ("bk", self.bk),
+                                  ("bc", self.bc),
+                                  ("stationarity", self.stationarity))
+                if v is not None}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TileConfig":
+        return cls(bm=d.get("bm"), bk=d.get("bk"), bc=d.get("bc"),
+                   stationarity=d.get("stationarity"))
+
+
+# The kernels' hardcoded constants (kept in sync by tests/test_autotune.py —
+# importing the kernels here would cycle through repro.kernels.__init__).
+DEFAULT_GEMM = TileConfig(bm=128, bk=128, bc=512)     # matmul.BM/BK/BC
+DEFAULT_CONV2D = TileConfig(bk=128, bc=128)           # conv2d.BK/BC
+
+
+@dataclass(frozen=True)
+class Entry:
+    """A cache hit: the winning config and the measurements behind it."""
+
+    config: TileConfig
+    source: str = "runtime"        # "table" | "cache" | "runtime"
+    tuned_ms: float = 0.0
+    default_ms: float = 0.0
+
+
+# ---------------------------------------------------------------------------
+# Keys
+# ---------------------------------------------------------------------------
+def conv2d_key(x_shape, w_shape, stride: int, padding: int, dtype,
+               epilogue: str = "none") -> str:
+    b, h, w, c = x_shape
+    fh, fw, _, k = w_shape
+    return (f"conv2d|x{b}x{h}x{w}x{c}|f{fh}x{fw}x{k}|s{stride}p{padding}"
+            f"|{dtype}|ep:{epilogue}")
+
+
+def gemm_key(m: int, c: int, k: int, dtype, epilogue: str = "none") -> str:
+    return f"gemm|m{m}|c{c}|k{k}|{dtype}|ep:{epilogue}"
+
+
+def _ep_none(key: str) -> str:
+    """The epilogue-agnostic fallback key (tiling barely depends on the tag)."""
+    return key[:key.rindex("|ep:")] + "|ep:none"
+
+
+# ---------------------------------------------------------------------------
+# Kernel-signature hash (invalidation)
+# ---------------------------------------------------------------------------
+_KERNELS_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "kernels")
+_HASHED_SOURCES = ("conv2d.py", "matmul.py")
+
+
+def kernel_signature_hash() -> str:
+    """Hash of the tunable-kernel sources; tables carry it, loaders check it."""
+    h = hashlib.sha256()
+    for name in _HASHED_SOURCES:
+        with open(os.path.join(_KERNELS_DIR, name), "rb") as f:
+            h.update(f.read())
+    return h.hexdigest()[:12]
+
+
+def tables_dir() -> str:
+    """Committed tuned tables (env-overridable for tests)."""
+    return os.environ.get("REPRO_TUNED_TABLES_DIR",
+                          os.path.join(_KERNELS_DIR, "tuned"))
+
+
+def cache_dir() -> str:
+    """User tuning cache (env-overridable)."""
+    return os.environ.get(
+        "REPRO_AUTOTUNE_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro-autotune"))
+
+
+# ---------------------------------------------------------------------------
+# Cache state
+# ---------------------------------------------------------------------------
+class _State:
+    def __init__(self) -> None:
+        self.entries: dict[str, Entry] = {}
+        self.stale_tables: list[dict] = []   # committed tables w/ bad hash
+
+
+_state: _State | None = None
+_enabled = os.environ.get("REPRO_AUTOTUNE", "") not in ("", "0", "off")
+
+
+def enabled() -> bool:
+    """The hot-path gate: one module-attribute read, nothing else."""
+    return _enabled
+
+
+def enable() -> None:
+    global _enabled
+    _enabled = True
+
+
+def disable() -> None:
+    global _enabled
+    _enabled = False
+
+
+def reset() -> None:
+    """Drop the in-memory cache; the next lookup reloads from disk."""
+    global _state
+    _state = None
+
+
+def _backend() -> str:
+    import jax
+    return jax.default_backend()
+
+
+def _load_table(path: str, source: str, state: _State,
+                cur_hash: str, backend: str) -> None:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return
+    if doc.get("backend") != backend:
+        return
+    if doc.get("kernel_hash") != cur_hash:
+        if source == "table":
+            state.stale_tables.append(
+                {"path": path, "table_hash": doc.get("kernel_hash"),
+                 "current_hash": cur_hash})
+        return
+    for key, e in doc.get("entries", {}).items():
+        # user cache outranks committed tables; runtime puts outrank both
+        # (load order is table -> cache; put() happens after).
+        state.entries[key] = Entry(
+            config=TileConfig.from_dict(e["config"]), source=source,
+            tuned_ms=e.get("tuned_ms", 0.0),
+            default_ms=e.get("default_ms", 0.0))
+
+
+def _ensure() -> _State:
+    global _state
+    if _state is None:
+        st = _State()
+        cur, backend = kernel_signature_hash(), _backend()
+        tdir = tables_dir()
+        if os.path.isdir(tdir):
+            for name in sorted(os.listdir(tdir)):
+                if name.endswith(".json"):
+                    _load_table(os.path.join(tdir, name), "table", st,
+                                cur, backend)
+        cpath = os.path.join(cache_dir(), f"cache.{backend}.json")
+        if os.path.exists(cpath):
+            _load_table(cpath, "cache", st, cur, backend)
+        _state = st
+    return _state
+
+
+def lookup(key: str) -> Entry | None:
+    """O(1): exact key, then the epilogue-agnostic fallback."""
+    entries = _ensure().entries
+    hit = entries.get(key)
+    if hit is None and not key.endswith("|ep:none"):
+        hit = entries.get(_ep_none(key))
+    return hit
+
+
+def lookup_conv2d(x_shape, w_shape, stride, padding, dtype,
+                  epilogue: str = "none") -> Entry | None:
+    return lookup(conv2d_key(x_shape, w_shape, stride, padding, dtype,
+                             epilogue))
+
+
+def lookup_gemm(m, c, k, dtype, epilogue: str = "none") -> Entry | None:
+    return lookup(gemm_key(m, c, k, dtype, epilogue))
+
+
+def put(key: str, config: TileConfig, *, source: str = "runtime",
+        tuned_ms: float = 0.0, default_ms: float = 0.0) -> Entry:
+    """Inject/overwrite an entry in the live cache (no disk write)."""
+    e = Entry(config, source, tuned_ms, default_ms)
+    _ensure().entries[key] = e
+    return e
+
+
+def stale_tables() -> list[dict]:
+    """Committed tables whose kernel hash no longer matches the sources."""
+    return list(_ensure().stale_tables)
+
+
+# ---------------------------------------------------------------------------
+# Persistence (the tuner writes through these)
+# ---------------------------------------------------------------------------
+def table_doc(entries: dict[str, Entry], *, impl: str = "pallas",
+              net: str | None = None) -> dict:
+    return {
+        "version": 1,
+        "backend": _backend(),
+        "impl": impl,
+        "net": net,
+        "kernel_hash": kernel_signature_hash(),
+        "entries": {
+            key: {"config": e.config.to_dict(), "tuned_ms": e.tuned_ms,
+                  "default_ms": e.default_ms}
+            for key, e in sorted(entries.items())},
+    }
+
+
+def write_table(path: str, entries: dict[str, Entry], *,
+                impl: str = "pallas", net: str | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(table_doc(entries, impl=impl, net=net), f, indent=2)
+        f.write("\n")
+
+
+def save_user_cache(entries: dict[str, Entry], *,
+                    impl: str = "pallas") -> str:
+    """Merge ``entries`` into the user cache file; returns its path."""
+    path = os.path.join(cache_dir(), f"cache.{_backend()}.json")
+    merged: dict[str, Entry] = {}
+    if os.path.exists(path):
+        st = _State()
+        _load_table(path, "cache", st, kernel_signature_hash(), _backend())
+        merged.update(st.entries)
+    merged.update(entries)
+    write_table(path, merged, impl=impl)
+    reset()
+    return path
+
+
+# ---------------------------------------------------------------------------
+# Cost-model-seeded candidate generation
+# ---------------------------------------------------------------------------
+_POW2 = (32, 64, 128, 256, 512)
+# generous VMEM budget for ranking (interpret mode enforces nothing; on real
+# TPUs ~16 MiB/core — candidates past this are deprioritized, not dropped)
+VMEM_BUDGET = 16 * 2**20
+
+
+def _ceil_to(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _clamp(t: int, dim: int) -> int:
+    return max(1, min(t, dim))
+
+
+def conv2d_candidates(x_shape, w_shape, *, stride: int = 1, padding: int = 0,
+                      max_candidates: int = 6) -> list[TileConfig]:
+    """Tile candidates for the serial-accumulation conv kernel.
+
+    Seeded by the cost model: candidates are ranked by padded-FLOPs waste
+    (channel pads to ``bc``/``bk`` multiples), then grid-step count, then the
+    VMEM footprint of the resident input block + weight tile + accumulator.
+    The kernel defaults are always included.
+    """
+    _, h, w, cin = x_shape
+    fh, fw, _, k = w_shape
+    oh = (h - fh + 2 * padding) // stride + 1
+    ow = (w - fw + 2 * padding) // stride + 1
+    hp, wp = h + 2 * padding, w + 2 * padding
+
+    cands = {(_clamp(DEFAULT_CONV2D.bk, k), _clamp(DEFAULT_CONV2D.bc, cin))}
+    for bk in _POW2:
+        for bc in _POW2:
+            cands.add((_clamp(bk, k), _clamp(bc, cin)))
+
+    def score(cand):
+        bk, bc = cand
+        waste = (_ceil_to(k, bk) * _ceil_to(cin, bc)) / (k * cin)
+        steps = -(-k // bk) * -(-cin // bc)
+        vmem = 4 * (hp * wp * bc + fh * fw * bc * bk + 2 * oh * ow * bk)
+        return (waste, steps, vmem > VMEM_BUDGET, -bk * bc)
+
+    ranked = sorted(cands, key=score)[:max_candidates]
+    return [TileConfig(bk=bk, bc=bc) for bk, bc in ranked]
+
+
+def gemm_candidates(m: int, c: int, k: int, *,
+                    max_candidates: int = 8) -> list[TileConfig]:
+    """Candidates for the dual-stationarity GEMM — tiles AND the dataflow.
+
+    Both stationarities are always represented (the empirical twin of the
+    paper's §III.B/§III.C operand swap): weight-stationary keeps the whole
+    ``(M, C)`` activation resident and streams ``(C, bk)`` weight columns
+    once, so it is a candidate at *any* M, not just the analytic M < 128 rule.
+    """
+    analytic_ws = m < 128   # modes.select_stationarity's rule
+    half = max(2, max_candidates // 2)
+
+    as_cands = {(_clamp(DEFAULT_GEMM.bm, m), _clamp(DEFAULT_GEMM.bk, k),
+                 _clamp(DEFAULT_GEMM.bc, c))}
+    for bm in _POW2[:4]:
+        for bk in _POW2[:4]:
+            for bc in _POW2:
+                as_cands.add((_clamp(bm, m), _clamp(bk, k), _clamp(bc, c)))
+
+    def as_score(cand):
+        bm, bk, bc = cand
+        waste = (_ceil_to(m, bm) * _ceil_to(k, bk) * _ceil_to(c, bc)
+                 / (m * k * c))
+        steps = -(-m // bm) * -(-k // bk) * -(-c // bc)
+        vmem = 4 * (bm * _ceil_to(c, bc) + bc * bk + bm * bk)
+        return (waste, steps, vmem > VMEM_BUDGET, -bm * bk)
+
+    ws_cands = {_clamp(DEFAULT_GEMM.bk, k)} | {_clamp(bk, k)
+                                               for bk in _POW2}
+
+    def ws_score(bk):
+        waste = _ceil_to(k, bk) / k
+        return (waste, -(-k // bk), 4 * (m * c + c * bk + m * bk)
+                > VMEM_BUDGET, -bk)
+
+    out = [TileConfig(bk=bk, stationarity="weight_stationary")
+           for bk in sorted(ws_cands, key=ws_score)[:half]]
+    out += [TileConfig(bm=bm, bk=bk, bc=bc,
+                       stationarity="activation_stationary")
+            for bm, bk, bc in sorted(as_cands, key=as_score)[:half]]
+    # analytic pick first: the search degrades gracefully under tight budgets
+    out.sort(key=lambda t: (t.stationarity == "weight_stationary")
+             != analytic_ws)
+    return out[:max_candidates]
+
+
+# ---------------------------------------------------------------------------
+# tile_util — padding waste, the TPU analogue of the paper's PUF
+# ---------------------------------------------------------------------------
+def tile_util_conv2d(x_shape, w_shape, tiles: TileConfig | None = None) -> float:
+    """Logical FLOPs / padded FLOPs under the conv kernel's channel tiling."""
+    cin, k = w_shape[2], w_shape[3]
+    bk = _clamp((tiles.bk if tiles and tiles.bk else DEFAULT_CONV2D.bk), k)
+    bc = _clamp((tiles.bc if tiles and tiles.bc else DEFAULT_CONV2D.bc), cin)
+    return (cin * k) / (_ceil_to(cin, bc) * _ceil_to(k, bk))
+
+
+def tile_util_gemm(m: int, c: int, k: int,
+                   tiles: TileConfig | None = None,
+                   stationarity: str | None = None) -> float:
+    """Logical FLOPs / padded FLOPs for the GEMM under either stationarity."""
+    st = (tiles.stationarity if tiles and tiles.stationarity
+          else stationarity)
+    bk = _clamp((tiles.bk if tiles and tiles.bk else DEFAULT_GEMM.bk), k)
+    if st == "weight_stationary":
+        return k / _ceil_to(k, bk)       # only K is padded; (M, C) resident
+    bm = _clamp((tiles.bm if tiles and tiles.bm else DEFAULT_GEMM.bm), m)
+    bc = _clamp((tiles.bc if tiles and tiles.bc else DEFAULT_GEMM.bc), c)
+    return (m * c * k) / (_ceil_to(m, bm) * _ceil_to(c, bc) * _ceil_to(k, bk))

@@ -45,6 +45,11 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# Default channel tiles — the fallback operating point.  The empirical
+# autotuner (``core.autotune``) selects per-layer-shape ``bk/bc`` by
+# measurement; ``kernels.ops`` passes the cached winner through the keyword
+# arguments of ``conv2d``.  ``core.autotune.DEFAULT_CONV2D`` mirrors these
+# values (test-enforced).
 BK = 128   # output-channel tile
 BC = 128   # input-channel tile
 

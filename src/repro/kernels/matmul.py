@@ -36,7 +36,11 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.modes import Stationarity, select_stationarity
 
-# MXU-aligned default tiles.
+# MXU-aligned default tiles.  These are the *fallback* operating point: the
+# empirical autotuner (``core.autotune`` + ``benchmarks/autotune.py``) selects
+# per-shape ``bm/bk/bc`` — and the stationarity itself — by measurement, and
+# ``kernels.ops`` threads the cached winner through the keyword arguments
+# below.  ``core.autotune.DEFAULT_GEMM`` mirrors these values (test-enforced).
 BM, BK, BC = 128, 128, 512
 
 
@@ -197,10 +201,19 @@ def matmul_weight_stationary(x: jnp.ndarray, w: jnp.ndarray, *,
 
 
 def matmul(x: jnp.ndarray, w: jnp.ndarray, *, interpret: bool = True,
-           stationarity: Stationarity | None = None, **epilogue) -> jnp.ndarray:
-    """CARLA-style reconfigurable GEMM: pick residency from the M extent."""
+           stationarity: Stationarity | None = None,
+           bm: int = BM, bk: int = BK, bc: int = BC,
+           **epilogue) -> jnp.ndarray:
+    """CARLA-style reconfigurable GEMM: pick residency from the M extent.
+
+    ``bm/bk/bc`` override the default tiles (the autotuner's knobs); the
+    weight-stationary variant only tiles K, so ``bm``/``bc`` apply to the
+    activation-stationary path alone.
+    """
     if stationarity is None:
         stationarity = select_stationarity(x.shape[0])
     if stationarity == Stationarity.WEIGHT_STATIONARY:
-        return matmul_weight_stationary(x, w, interpret=interpret, **epilogue)
-    return matmul_act_stationary(x, w, interpret=interpret, **epilogue)
+        return matmul_weight_stationary(x, w, bk=bk, interpret=interpret,
+                                        **epilogue)
+    return matmul_act_stationary(x, w, bm=bm, bk=bk, bc=bc,
+                                 interpret=interpret, **epilogue)

@@ -7,8 +7,19 @@
                    plain HLO convolutions/GEMMs);
   * ``"auto"``   — pallas on TPU backends, ref elsewhere.
 
+The ``REPRO_IMPL`` environment variable overrides all of it — benchmarks and
+the autotuner force ``pallas``/``ref`` without editing call sites.  The
+resolved impl is recorded as the ``impl`` span attribute.
+
 Mode selection (which dataflow/stationarity) is orthogonal to ``impl`` and
-always follows ``core.modes`` — the software twin of CARLA's controller.
+follows ``core.modes`` — the software twin of CARLA's controller — unless the
+empirical tuning cache (``core.autotune``) holds a measured winner for the
+layer's shape key, in which case the cached tile sizes *and* stationarity are
+used instead.  The lookup is gated on ``autotune.enabled()`` (one attribute
+read, so the disabled path costs nothing) and is an O(1) dict hit; the
+resulting :class:`~repro.core.autotune.TileConfig` is hashable and rides
+through ``jax.jit`` as a static argument, so a cache hit re-uses the already
+compiled tuned kernel with zero per-call overhead.
 
 ``conv2d``/``conv1x1``/``gemm`` accept an ``epilogue=`` (``core.fuse.Epilogue``):
 folded-BN scale/bias, residual add, and ReLU are applied inside the kernel's
@@ -19,18 +30,24 @@ vs. the unfused op sequence (``epilogue_hbm_saved``).
 
 Every public entry point is telemetry-instrumented: when the global tracer is
 enabled (``observability.trace``), the dispatch records which mode the
-controller picked, operand shapes/bytes, FLOPs, and wall time under
-``block_until_ready``.  When tracing is disabled (the default) the only cost
-is one module-attribute read per call — the jitted function is invoked
-directly, no span objects or clock reads.
+controller picked, operand shapes/bytes, FLOPs, wall time under
+``block_until_ready``, and the tuning ledger — ``tuned`` (did the cache hit),
+``tile_config``/``tuning_source`` (what ran and why), and ``tile_util`` (the
+padding-waste PUF analogue: logical FLOPs / padded FLOPs under the tiling
+that actually ran).  When tracing is disabled (the default) the only cost is
+one module-attribute read per call — the jitted function is invoked directly,
+no span objects or clock reads.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import autotune
+from repro.core.autotune import TileConfig
 from repro.core.fuse import Epilogue
 from repro.core.modes import Stationarity, select_stationarity
 from repro.observability import trace
@@ -50,9 +67,20 @@ def _on_tpu() -> bool:
 
 
 def _resolve(impl: str) -> str:
+    """Resolve ``auto`` (and the ``REPRO_IMPL`` env override) to pallas/ref."""
+    impl = os.environ.get("REPRO_IMPL") or impl
     if impl == "auto":
         return "pallas" if _on_tpu() else "ref"
     return impl
+
+
+def _lookup(kind: str, key_args, impl: str):
+    """Tuning-cache probe: O(1) dict hit, only on the resolved pallas path."""
+    if not autotune.enabled() or impl != "pallas":
+        return None
+    if kind == "conv2d":
+        return autotune.lookup_conv2d(*key_args)
+    return autotune.lookup_gemm(*key_args)
 
 
 def _nbytes(*arrays) -> int:
@@ -69,15 +97,28 @@ def _epilogue_attrs(sp, ep: Epilogue, out) -> None:
             2 * ep.n_fused_ops * out.size * out.dtype.itemsize
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("stride", "padding", "impl", "relu"))
+def _tuning_attrs(sp, entry, tiles: TileConfig | None) -> None:
+    """Record what the tuning cache contributed to this dispatch."""
+    sp.attrs["tuned"] = entry is not None
+    sp.attrs["tile_config"] = tiles.short if tiles is not None else "default"
+    sp.attrs["tuning_source"] = entry.source if entry is not None else "default"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "padding", "impl", "relu", "tiles"))
 def _conv2d_jit(x, w, scale=None, bias=None, residual=None, *,
                 relu: bool = False, stride: int = 1, padding: int = 0,
-                impl: str = "auto"):
+                impl: str = "auto", tiles: TileConfig | None = None):
     if _resolve(impl) == "pallas":
+        kw = {}
+        if tiles is not None:
+            if tiles.bk:
+                kw["bk"] = tiles.bk
+            if tiles.bc:
+                kw["bc"] = tiles.bc
         return _conv2d_pallas(x, w, stride=stride, padding=padding,
                               scale=scale, bias=bias, relu=relu,
-                              residual=residual, interpret=not _on_tpu())
+                              residual=residual, interpret=not _on_tpu(), **kw)
     return _ref.conv2d_ref(x, w, stride=stride, padding=padding, scale=scale,
                            bias=bias, relu=relu,
                            residual=residual).astype(x.dtype)
@@ -87,28 +128,39 @@ def conv2d(x, w, *, stride: int = 1, padding: int = 0, impl: str = "auto",
            epilogue: Epilogue | None = None):
     """General NHWC conv; CARLA 3x3/7x7 serial-accumulation dataflow."""
     ep = epilogue or _NO_EPILOGUE
+    impl = _resolve(impl)
+    entry = _lookup("conv2d",
+                    (x.shape, w.shape, stride, padding, x.dtype, ep.tag), impl)
+    tiles = entry.config if entry is not None else None
     if not trace.enabled():
         return _conv2d_jit(x, w, ep.scale, ep.bias, ep.residual, relu=ep.relu,
-                           stride=stride, padding=padding, impl=impl)
+                           stride=stride, padding=padding, impl=impl,
+                           tiles=tiles)
     fh, fw, _, k = w.shape
-    with trace.span("kernels.conv2d", impl=_resolve(impl),
+    with trace.span("kernels.conv2d", impl=impl,
                     x_shape=list(x.shape), w_shape=list(w.shape),
                     stride=stride, padding=padding,
                     dtype=str(x.dtype)) as sp:
         out = _conv2d_jit(x, w, ep.scale, ep.bias, ep.residual, relu=ep.relu,
-                          stride=stride, padding=padding, impl=impl)
+                          stride=stride, padding=padding, impl=impl,
+                          tiles=tiles)
         jax.block_until_ready(out)
         b, oh, ow, _ = out.shape
         sp.attrs["flops"] = 2 * b * oh * ow * k * fh * fw * x.shape[-1]
         sp.attrs["bytes_touched"] = _nbytes(x, w, out, ep.scale, ep.bias,
                                             ep.residual)
+        sp.attrs["tile_util"] = autotune.tile_util_conv2d(x.shape, w.shape,
+                                                          tiles)
+        _tuning_attrs(sp, entry, tiles)
         _epilogue_attrs(sp, ep, out)
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "impl", "relu"))
+@functools.partial(jax.jit,
+                   static_argnames=("stride", "impl", "relu", "tiles"))
 def _conv1x1_jit(x, w, scale=None, bias=None, residual=None, *,
-                 relu: bool = False, stride: int = 1, impl: str = "auto"):
+                 relu: bool = False, stride: int = 1, impl: str = "auto",
+                 tiles: TileConfig | None = None):
     if stride != 1:
         x = x[:, ::stride, ::stride, :]
     b, h, wd, c = x.shape
@@ -116,33 +168,71 @@ def _conv1x1_jit(x, w, scale=None, bias=None, residual=None, *,
     xf = x.reshape(b * h * wd, c)
     rf = residual.reshape(b * h * wd, k) if residual is not None else None
     if _resolve(impl) == "pallas":
-        st = select_stationarity(xf.shape[0])
-        fn = (matmul_weight_stationary if st == Stationarity.WEIGHT_STATIONARY
-              else matmul_act_stationary)
-        out = fn(xf, w, scale=scale, bias=bias, relu=relu, residual=rf,
-                 interpret=not _on_tpu())
+        out = _tiled_matmul(xf, w, scale, bias, relu, rf, tiles)
     else:
         out = _ref.matmul_ref(xf, w, scale=scale, bias=bias, relu=relu,
                               residual=rf).astype(x.dtype)
     return out.reshape(b, h, wd, k)
 
 
+def _tiled_matmul(xf, w, scale, bias, relu, rf,
+                  tiles: TileConfig | None,
+                  stationarity: Stationarity | None = None):
+    """Shared pallas GEMM dispatch: tuned stationarity + tile overrides.
+
+    Precedence for the dataflow: an explicit ``stationarity`` argument, then
+    the tuning cache's measured choice, then the analytic controller rule.
+    """
+    st = stationarity
+    if st is None and tiles is not None and tiles.stationarity:
+        st = Stationarity(tiles.stationarity)
+    if st is None:
+        st = select_stationarity(xf.shape[0])
+    kw = {}
+    if tiles is not None and tiles.bk:
+        kw["bk"] = tiles.bk
+    if st == Stationarity.WEIGHT_STATIONARY:
+        return matmul_weight_stationary(xf, w, scale=scale, bias=bias,
+                                        relu=relu, residual=rf,
+                                        interpret=not _on_tpu(), **kw)
+    if tiles is not None:
+        if tiles.bm:
+            kw["bm"] = tiles.bm
+        if tiles.bc:
+            kw["bc"] = tiles.bc
+    return matmul_act_stationary(xf, w, scale=scale, bias=bias, relu=relu,
+                                 residual=rf, interpret=not _on_tpu(), **kw)
+
+
+def _gemm_stationarity(rows: int, tiles: TileConfig | None,
+                       stationarity: Stationarity | None = None) -> Stationarity:
+    """The dataflow `_tiled_matmul` will pick, for span reporting."""
+    if stationarity is not None:
+        return stationarity
+    if tiles is not None and tiles.stationarity:
+        return Stationarity(tiles.stationarity)
+    return select_stationarity(rows)
+
+
 def conv1x1(x, w, *, stride: int = 1, impl: str = "auto",
             epilogue: Epilogue | None = None):
     """Pointwise conv via the dual-stationarity GEMM (paper §III.B/C)."""
     ep = epilogue or _NO_EPILOGUE
-    if not trace.enabled():
-        return _conv1x1_jit(x, w, ep.scale, ep.bias, ep.residual, relu=ep.relu,
-                            stride=stride, impl=impl)
+    impl = _resolve(impl)
     b, h, wd, c = x.shape
     rows = b * -(-h // stride) * -(-wd // stride)   # x[:, ::s, ::s] row count
-    st = select_stationarity(rows)
-    with trace.span("kernels.conv1x1", impl=_resolve(impl),
+    entry = _lookup("gemm", (rows, c, w.shape[-1], x.dtype, ep.tag), impl)
+    tiles = entry.config if entry is not None else None
+    if not trace.enabled():
+        return _conv1x1_jit(x, w, ep.scale, ep.bias, ep.residual, relu=ep.relu,
+                            stride=stride, impl=impl, tiles=tiles)
+    st = _gemm_stationarity(rows, tiles)
+    with trace.span("kernels.conv1x1", impl=impl,
                     x_shape=list(x.shape), w_shape=list(w.shape),
                     stride=stride, stationarity=st.value,
                     dtype=str(x.dtype)) as sp:
         out = _conv1x1_jit(x, w, ep.scale, ep.bias, ep.residual, relu=ep.relu,
-                           stride=stride, impl=impl)
+                           stride=stride, impl=impl, tiles=tiles)
         jax.block_until_ready(out)
         sp.attrs["flops"] = 2 * rows * c * w.shape[-1]
         # A strided 1x1 subsamples BEFORE the GEMM, so only the strided view
@@ -150,20 +240,22 @@ def conv1x1(x, w, *, stride: int = 1, impl: str = "auto",
         sp.attrs["bytes_touched"] = (rows * c * x.dtype.itemsize
                                      + _nbytes(w, out, ep.scale, ep.bias,
                                                ep.residual))
+        sp.attrs["tile_util"] = autotune.tile_util_gemm(
+            rows, c, w.shape[-1], tiles, stationarity=st.value)
+        _tuning_attrs(sp, entry, tiles)
         _epilogue_attrs(sp, ep, out)
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("impl", "stationarity", "relu"))
+@functools.partial(
+    jax.jit, static_argnames=("impl", "stationarity", "relu", "tiles"))
 def _gemm_jit(x, w, scale=None, bias=None, residual=None, *,
               relu: bool = False, impl: str = "auto",
-              stationarity: Stationarity | None = None):
+              stationarity: Stationarity | None = None,
+              tiles: TileConfig | None = None):
     if _resolve(impl) == "pallas":
-        st = stationarity or select_stationarity(x.shape[0])
-        fn = (matmul_weight_stationary if st == Stationarity.WEIGHT_STATIONARY
-              else matmul_act_stationary)
-        return fn(x, w, scale=scale, bias=bias, relu=relu, residual=residual,
-                  interpret=not _on_tpu())
+        return _tiled_matmul(x, w, scale, bias, relu, residual, tiles,
+                             stationarity)
     return _ref.matmul_ref(x, w, scale=scale, bias=bias, relu=relu,
                            residual=residual).astype(x.dtype)
 
@@ -173,19 +265,26 @@ def gemm(x, w, *, impl: str = "auto",
          epilogue: Epilogue | None = None):
     """(M, C) @ (C, K) with CARLA stationarity planning."""
     ep = epilogue or _NO_EPILOGUE
+    impl = _resolve(impl)
+    entry = _lookup("gemm", (x.shape[0], x.shape[1], w.shape[-1], x.dtype,
+                             ep.tag), impl)
+    tiles = entry.config if entry is not None else None
     if not trace.enabled():
         return _gemm_jit(x, w, ep.scale, ep.bias, ep.residual, relu=ep.relu,
-                         impl=impl, stationarity=stationarity)
-    st = stationarity or select_stationarity(x.shape[0])
-    with trace.span("kernels.gemm", impl=_resolve(impl),
+                         impl=impl, stationarity=stationarity, tiles=tiles)
+    st = _gemm_stationarity(x.shape[0], tiles, stationarity)
+    with trace.span("kernels.gemm", impl=impl,
                     x_shape=list(x.shape), w_shape=list(w.shape),
                     stationarity=st.value, dtype=str(x.dtype)) as sp:
         out = _gemm_jit(x, w, ep.scale, ep.bias, ep.residual, relu=ep.relu,
-                        impl=impl, stationarity=stationarity)
+                        impl=impl, stationarity=stationarity, tiles=tiles)
         jax.block_until_ready(out)
         sp.attrs["flops"] = 2 * x.shape[0] * x.shape[1] * w.shape[-1]
         sp.attrs["bytes_touched"] = _nbytes(x, w, out, ep.scale, ep.bias,
                                             ep.residual)
+        sp.attrs["tile_util"] = autotune.tile_util_gemm(
+            x.shape[0], x.shape[1], w.shape[-1], tiles, stationarity=st.value)
+        _tuning_attrs(sp, entry, tiles)
         _epilogue_attrs(sp, ep, out)
     return out
 
@@ -199,9 +298,10 @@ def _conv1d_jit(x, w, *, impl: str = "auto"):
 
 def conv1d_causal(x, w, *, impl: str = "auto"):
     """Depthwise causal conv1d (Mamba2 short conv / RWKV token shift)."""
+    impl = _resolve(impl)
     if not trace.enabled():
         return _conv1d_jit(x, w, impl=impl)
-    with trace.span("kernels.conv1d_causal", impl=_resolve(impl),
+    with trace.span("kernels.conv1d_causal", impl=impl,
                     x_shape=list(x.shape), w_shape=list(w.shape),
                     dtype=str(x.dtype)) as sp:
         out = _conv1d_jit(x, w, impl=impl)

@@ -11,10 +11,12 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _run(*argv):
+def _run(*argv, env_extra=None):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    if env_extra:
+        env.update(env_extra)
     return subprocess.run([sys.executable, "-m", *argv], cwd=REPO, env=env,
                           capture_output=True, text=True, timeout=600)
 
@@ -65,12 +67,59 @@ def test_benchmarks_run_smoke_cli_and_regression_gate(tmp_path):
 
 @pytest.mark.slow
 def test_regression_gate_smoke_against_committed_baseline():
-    """Tier-1 perf gate: fresh smoke measurement vs the committed BENCH_8
+    """Tier-1 perf gate: fresh smoke measurement vs the committed BENCH_9
     baseline — catches fused-path perf/bytes regressions at merge time."""
-    assert os.path.exists(os.path.join(REPO, "BENCH_8.json")), \
-        "BENCH_8.json baseline missing (benchmarks.run --bench-json)"
+    assert os.path.exists(os.path.join(REPO, "BENCH_9.json")), \
+        "BENCH_9.json baseline missing (benchmarks.run --bench-json --tuned)"
     r = _run("benchmarks.check_regression", "--smoke")
     assert r.returncode == 0, r.stdout + r.stderr
     assert "perf gate: PASS" in r.stdout
     # the smoke filter really selected the smoke nets, fused included
     assert "smoke_fused:" in r.stdout
+    # the baseline is tuned, so the fresh run re-measures the tuned deltas
+    assert "smoke tuning:" in r.stdout
+
+
+@pytest.mark.slow
+def test_autotune_smoke_cli(tmp_path):
+    """Tier-1 liveness for the tuner: search the smoke keys, write a table."""
+    out = str(tmp_path / "table.json")
+    r = _run("benchmarks.autotune", "--smoke", "--out", out)
+    assert r.returncode == 0, r.stderr
+    assert "unique shape keys tuned" in r.stdout
+    with open(out) as f:
+        doc = json.load(f)
+    assert doc["entries"], "tuner wrote an empty table"
+    assert all(k.startswith(("conv2d|", "gemm|")) for k in doc["entries"])
+    # every entry records both sides of the comparison the gate needs
+    assert all("tuned_ms" in e and "default_ms" in e
+               for e in doc["entries"].values())
+    # the table is tagged for invalidation against the current sources
+    from repro.core import autotune
+    assert doc["kernel_hash"] == autotune.kernel_signature_hash()
+
+
+@pytest.mark.slow
+def test_regression_gate_fails_on_stale_tuned_table(tmp_path):
+    """A committed table whose kernel hash mismatches the sources must fail
+    the gate (the satellite staleness check) with an actionable message."""
+    tdir = tmp_path / "tables"
+    tdir.mkdir()
+    (tdir / "stale.json").write_text(json.dumps({
+        "version": 1, "backend": "cpu", "impl": "pallas",
+        "kernel_hash": "deadbeef0000",
+        "entries": {"gemm|m10|c8|k8|float32|ep:none":
+                    {"config": {"bk": 8}}},
+    }))
+    bench = os.path.join(REPO, "BENCH_9.json")
+    r = _run("benchmarks.check_regression", "--baseline", bench,
+             "--candidate", bench,
+             env_extra={"REPRO_TUNED_TABLES_DIR": str(tdir)})
+    assert r.returncode != 0
+    assert "stale tuned table" in r.stdout
+    assert "deadbeef0000" in r.stdout
+    # --skip-stale-check restores the pass (same candidate, same baseline)
+    r = _run("benchmarks.check_regression", "--baseline", bench,
+             "--candidate", bench, "--skip-stale-check",
+             env_extra={"REPRO_TUNED_TABLES_DIR": str(tdir)})
+    assert r.returncode == 0, r.stdout + r.stderr
