@@ -20,7 +20,11 @@ every unique (layer shape, dtype, epilogue, backend) key of a network it
 
 Run:  PYTHONPATH=src python -m benchmarks.autotune --net resnet50 --commit
           [--reps 2] [--candidates 6] [--batch 1] [--out table.json]
-          [--smoke]
+          [--smoke] [--sparse]
+
+``--sparse`` appends the structured-sparse twin of the layer set (pruned
+channel counts are *new* shape keys), so sparse dispatches get their own
+empirically tuned tiles instead of falling back to the hardcoded defaults.
 
 ``--smoke`` tunes the tiny smoke layer set with a minimal budget (seconds) —
 the tier-1 liveness mode.  Tuning always measures the *pallas* kernels (tiles
@@ -46,6 +50,7 @@ from repro.core.autotune import Entry, TileConfig
 from repro.core.networks import (
     resnet50_conv_layers,
     smoke_conv_layers,
+    sparse_conv_layers,
     vgg16_conv_layers,
 )
 
@@ -155,14 +160,16 @@ def tune_layers(layers, *, batch: int = 1, reps: int = 2,
 
 
 def collect_tuning_delta(net: str, *, batch: int = 1,
-                         reps: int = 2) -> dict:
+                         reps: int = 2, layers=None) -> dict:
     """Fresh tuned-vs-default measurement for every key a table covers.
 
     Uses whatever the tuning cache currently resolves (committed tables +
     user cache); keys with no entry are reported untimed so coverage gaps are
-    visible rather than silently dropped.
+    visible rather than silently dropped.  ``layers`` overrides the layer
+    set (e.g. the structured-sparse twin of ``net``).
     """
-    layers = NET_LAYERS[net]()
+    if layers is None:
+        layers = NET_LAYERS[net]()
     seed = jax.random.PRNGKey(3)
     seen: set[str] = set()
     out = []
@@ -205,6 +212,10 @@ def main() -> None:
                     help="max candidates timed per shape key")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny layer set, minimal budget (CI liveness)")
+    ap.add_argument("--sparse", action="store_true",
+                    help="also tune the structured-sparse (pruned-channel) "
+                         "twin of the layer set, so sparse dispatches hit "
+                         "tuned tiles instead of falling back to defaults")
     ap.add_argument("--commit", action="store_true",
                     help="write the committed table under "
                          "src/repro/kernels/tuned/ instead of the user cache")
@@ -218,6 +229,8 @@ def main() -> None:
     reps = 1 if args.smoke else args.reps
     cands = min(args.candidates, 3) if args.smoke else args.candidates
     layers = NET_LAYERS[net]()
+    if args.sparse:
+        layers = layers + sparse_conv_layers(net)
 
     print(f"=== autotune {net}: {len(layers)} layers, batch={args.batch}, "
           f"impl=pallas ({jax.default_backend()}), reps={reps}, "

@@ -1,15 +1,20 @@
 """Perf-regression gate: compare a bench run against the committed baseline.
 
-The baseline (``BENCH_9.json``, written by ``benchmarks/run.py
+The baseline (``BENCH_10.json``, written by ``benchmarks/run.py
 --bench-json``) records per-layer measured wall ms, achieved GFLOP/s, and
-utilization for the ResNet-50/VGG-16 layer sets — both unfused and through
-the fused-epilogue path (``<net>_fused`` entries) — plus the per-bottleneck-
-block fused-vs-unfused HBM-bytes delta.  This CLI re-measures the same layer
-sets (or loads a second record via ``--candidate``) and exits nonzero when
-any layer, or a network total, slows past the tolerance band — so CI can
-gate merges on measured performance, not just correctness.  The fused-path
-invariant (every block touches strictly fewer bytes fused than unfused) is
-checked exactly, not banded.
+utilization for the ResNet-50/VGG-16 layer sets — unfused, through the
+fused-epilogue path (``<net>_fused`` entries), and through the structured-
+sparse twins (``<net>_sparse`` entries) — plus the per-bottleneck-block
+fused-vs-unfused HBM-bytes delta and the per-layer dense-vs-sparse delta.
+This CLI re-measures the same layer sets (or loads a second record via
+``--candidate``) and exits nonzero when any layer, or a network total,
+slows past the tolerance band — so CI can gate merges on measured
+performance, not just correctness.  The fused-path invariant (every block
+touches strictly fewer bytes fused than unfused) is checked exactly, not
+banded; so is the bytes half of the sparse invariant (every pruned layer
+touches strictly fewer bytes than its dense twin), while its wall-clock
+half (a pruned layer runs no slower than its dense twin) gets the usual
+noise band.
 
 Two PR 9 checks ride along:
 
@@ -38,6 +43,9 @@ a layer regresses only when ``cand_ms > base_ms * (1 + tolerance)``; getting
 faster never fails.  Totals use a tighter band (noise averages out).
 ``--inject-slowdown F`` multiplies the candidate's measured times by ``F``
 before comparing — the self-test hook that proves the gate trips.
+``--inject-sparse-violation`` is the same self-test hook for the sparse
+invariant: it rewrites every pruned layer's bytes up to its dense twin's,
+which must trip the strict fewer-bytes check.
 """
 from __future__ import annotations
 
@@ -47,7 +55,7 @@ import os
 import sys
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-DEFAULT_BASELINE = os.path.join(REPO_ROOT, "BENCH_9.json")
+DEFAULT_BASELINE = os.path.join(REPO_ROOT, "BENCH_10.json")
 
 LAYER_TOL = 0.75     # per-layer band: single-layer walls are the noisiest
 TOTAL_TOL = 0.35     # network-total band
@@ -62,6 +70,11 @@ TOTAL_ABS_MS = 2.0
 # and only a systematic inversion (stale table) should trip this.
 TUNED_TOL = 0.5
 TUNED_ABS_MS = 5.0
+# sparse-vs-dense wall band: a pruned layer executes a strict subset of its
+# dense twin's MACs, so "no slower" is the physical expectation — the band
+# only absorbs single-layer wall jitter (sub-ms smoke layers especially).
+SPARSE_TOL = 0.5
+SPARSE_ABS_MS = 0.5
 
 
 def load(path: str) -> dict:
@@ -84,7 +97,56 @@ def inject_slowdown(record: dict, factor: float) -> dict:
         for entry in delta["layers"]:
             if entry.get("tuned"):
                 entry["tuned_ms"] *= factor
+    # both sides of the sparse delta scale together: a global slowdown is
+    # not a sparse-invariant violation
+    for sd in rec.get("sparse_delta", {}).values():
+        for entry in sd["layers"]:
+            entry["dense_ms"] *= factor
+            entry["sparse_ms"] *= factor
+        sd["total_dense_ms"] *= factor
+        sd["total_sparse_ms"] *= factor
     return rec
+
+
+def inject_sparse_violation(record: dict) -> dict:
+    """Raise every pruned layer's bytes to its dense twin's (self-test hook).
+
+    The sparse invariant's bytes half is strict, so this must always trip
+    the gate — mirroring what ``--inject-slowdown`` proves for the bands.
+    """
+    rec = json.loads(json.dumps(record))
+    for sd in rec.get("sparse_delta", {}).values():
+        for entry in sd["layers"]:
+            if entry.get("pruned"):
+                entry["sparse_bytes_mb"] = entry["dense_bytes_mb"]
+                entry["saved_mb"] = 0.0
+    return rec
+
+
+def check_sparse(cand: dict, *, sparse_tol: float = SPARSE_TOL) -> list[str]:
+    """The structured-sparsity invariant, per pruned layer vs its dense twin.
+
+    Bytes are deterministic array footprints, so "strictly fewer" is exact;
+    wall clocks get the ``sparse_tol`` band plus absolute slack.
+    """
+    problems: list[str] = []
+    for net, sd in cand.get("sparse_delta", {}).items():
+        for entry in sd.get("layers", []):
+            if not entry.get("pruned"):
+                continue
+            sb, db = entry["sparse_bytes_mb"], entry["dense_bytes_mb"]
+            if not sb < db:
+                problems.append(
+                    f"{net}/{entry['layer']}: pruned layer touches "
+                    f"{sb:.3f} MB, not strictly below its dense twin's "
+                    f"{db:.3f} MB")
+            sm, dm = entry["sparse_ms"], entry["dense_ms"]
+            if sm > dm * (1 + sparse_tol) + SPARSE_ABS_MS:
+                problems.append(
+                    f"{net}/{entry['layer']}: pruned layer {sm:.2f} ms vs "
+                    f"dense twin {dm:.2f} ms "
+                    f"(+{(sm / dm - 1) * 100:.0f}% > {sparse_tol * 100:.0f}%)")
+    return problems
 
 
 def check_tuning(cand: dict, *, tuned_tol: float = TUNED_TOL) -> list[str]:
@@ -184,10 +246,15 @@ def main() -> None:
     ap.add_argument("--util-tolerance", type=float, default=UTIL_TOL)
     ap.add_argument("--tuned-tolerance", type=float, default=TUNED_TOL,
                     help="band for the tuned-vs-default check")
+    ap.add_argument("--sparse-tolerance", type=float, default=SPARSE_TOL,
+                    help="wall band for the pruned-vs-dense-twin check")
     ap.add_argument("--skip-stale-check", action="store_true",
                     help="skip the committed-table kernel-hash check")
     ap.add_argument("--inject-slowdown", type=float, default=1.0,
                     help="scale candidate times by this factor (self-test)")
+    ap.add_argument("--inject-sparse-violation", action="store_true",
+                    help="raise pruned layers' bytes to their dense twins' "
+                         "(sparse-invariant self-test)")
     ap.add_argument("--smoke", action="store_true",
                     help="fresh measurement uses the tiny smoke layer set")
     ap.add_argument("--reps", type=int, default=0,
@@ -204,6 +271,10 @@ def main() -> None:
         base["fused_delta"] = {k: v
                                for k, v in base.get("fused_delta", {}).items()
                                if k.startswith("smoke")}
+        base["sparse_delta"] = {k: v
+                                for k, v in base.get("sparse_delta",
+                                                     {}).items()
+                                if k.startswith("smoke")}
         base["tuning"] = {k: v for k, v in base.get("tuning", {}).items()
                           if k.startswith("smoke")}
         if not base["networks"]:
@@ -223,6 +294,9 @@ def main() -> None:
     if args.inject_slowdown != 1.0:
         cand = inject_slowdown(cand, args.inject_slowdown)
         print(f"(injected {args.inject_slowdown}x slowdown into candidate)")
+    if args.inject_sparse_violation:
+        cand = inject_sparse_violation(cand)
+        print("(injected sparse-invariant violation into candidate)")
 
     if base.get("backend") != cand.get("backend"):
         print(f"WARNING: backend mismatch — baseline "
@@ -233,6 +307,7 @@ def main() -> None:
                        total_tol=args.total_tolerance,
                        util_tol=args.util_tolerance)
     problems += check_tuning(cand, tuned_tol=args.tuned_tolerance)
+    problems += check_sparse(cand, sparse_tol=args.sparse_tolerance)
     if not args.skip_stale_check:
         problems += check_stale_tables()
     for net, b in sorted(base["networks"].items()):
@@ -241,6 +316,10 @@ def main() -> None:
             print(f"{net}: baseline {b['total_measured_ms']:.1f} ms -> "
                   f"candidate {c['total_measured_ms']:.1f} ms "
                   f"({len(b['layers'])} layers)")
+    for net, sd in sorted(cand.get("sparse_delta", {}).items()):
+        print(f"{net} sparse: {sd['pruned_layers']} pruned layers, "
+              f"{sd['total_saved_mb']:.2f} MB fewer bytes, "
+              f"{sd['total_dense_ms']:.1f} -> {sd['total_sparse_ms']:.1f} ms")
     for net, delta in sorted(cand.get("tuning", {}).items()):
         d, t = delta["total_default_ms"], delta["total_tuned_ms"]
         print(f"{net} tuning: defaults {d:.1f} ms -> tuned {t:.1f} ms over "

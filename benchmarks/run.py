@@ -1,7 +1,7 @@
 """Benchmark driver: one table per paper figure + kernel bench + roofline.
 
 Run:  PYTHONPATH=src python -m benchmarks.run  [--skip-kernels]
-          [--smoke] [--bench-json BENCH_9.json] [--tuned]
+          [--smoke] [--bench-json BENCH_10.json] [--tuned] [--sparse]
 
 ``--bench-json`` measures the ResNet-50/VGG-16 layer sets — unfused and
 through the fused-epilogue path — via traced ``carla_conv`` dispatches and
@@ -11,6 +11,11 @@ block fused-vs-unfused HBM-bytes delta (``fused_delta``).
 ``--tuned`` enables the empirical tuning cache (committed tables +
 ``~/.cache/repro-autotune``) during the measurement and embeds the per-key
 tuned-vs-default deltas (``tuning``) that the regression gate bands.
+``--sparse`` additionally measures the structured-sparse twins of the layer
+sets (paper Table I) through the real kernels and embeds the per-layer
+dense-vs-sparse comparison (``sparse_delta``) the gate's sparse invariant
+checks: every pruned layer must touch strictly fewer bytes and run no
+slower than its dense twin.
 ``--smoke`` keeps everything in seconds: analytic tables + fidelity gate
 only, and the bench record (if requested) uses the tiny smoke layer set.
 """
@@ -49,6 +54,10 @@ def main() -> None:
     ap.add_argument("--tuned", action="store_true",
                     help="enable the tuning cache for --bench-json and embed "
                          "the tuned-vs-default deltas")
+    ap.add_argument("--sparse", action="store_true",
+                    help="also measure the structured-sparse layer-set twins "
+                         "for --bench-json and embed the dense-vs-sparse "
+                         "per-layer deltas (sparse_delta)")
     args = ap.parse_args()
 
     from . import paper_figures
@@ -97,6 +106,11 @@ def main() -> None:
         nets = (["smoke", "smoke_fused"] if args.smoke
                 else ["smoke", "smoke_fused",
                       "resnet50", "resnet50_fused", "vgg16", "vgg16_fused"])
+        if args.sparse:
+            # sparse twins ride along; the delta pairs them with the dense
+            # nets already in the list, so order doesn't matter
+            nets += (["smoke_sparse"] if args.smoke
+                     else ["smoke_sparse", "resnet50_sparse"])
         reps = 1 if args.smoke else args.bench_reps
         record = collect_bench(nets, reps=reps, smoke=args.smoke,
                                tuned=args.tuned)
@@ -112,6 +126,12 @@ def main() -> None:
                   f"HBM round-trips saved over {len(fd['blocks'])} blocks, "
                   f"{fd['total_speedup']:.2f}x wall; min block saving "
                   f"{worst['saved_mb']:.2f} MB ({worst['block']})")
+        for net, sd in record.get("sparse_delta", {}).items():
+            print(f"sparse delta [{net}]: {sd['pruned_layers']} pruned "
+                  f"layers touch {sd['total_saved_mb']:.1f} MB fewer bytes, "
+                  f"{sd['total_dense_ms']:.1f} ms dense -> "
+                  f"{sd['total_sparse_ms']:.1f} ms sparse "
+                  f"({sd['total_speedup']:.2f}x wall)")
         for net, delta in record.get("tuning", {}).items():
             d, t = delta["total_default_ms"], delta["total_tuned_ms"]
             print(f"tuning [{net}]: defaults {d:.1f} ms -> tuned {t:.1f} ms "

@@ -9,7 +9,13 @@ Runs every conv layer of ResNet-50 (and VGG-16 with --net vgg16) through
 
 Run:  PYTHONPATH=src python -m benchmarks.telemetry_report [--net resnet50]
           [--batch 1] [--reps 3] [--limit N] [--json out.json]
-          [--chrome out.trace.json] [--smoke] [--fused] [--tuned]
+          [--chrome out.trace.json] [--smoke] [--fused] [--tuned] [--sparse]
+
+``--sparse`` swaps in the structured-pruned twin of the layer set (paper
+Table I: the first two convs of every bottleneck halve their filters, the
+shortcut trunk stays dense) and tags every pruned dispatch with its dense
+twin — the report's ``keep%`` column shows the kept MAC fraction per layer,
+and the totals line reports the whole-net kept-MAC fraction.
 
 ``--tuned`` enables the empirical tuning cache (``core.autotune``) for the
 run: dispatches whose shape key hits a committed/user tuned table run with
@@ -45,10 +51,17 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import Epilogue, autotune, carla_conv, epilogue_dram_delta_bytes
+from repro.core import (
+    Epilogue,
+    SparsityTag,
+    autotune,
+    carla_conv,
+    epilogue_dram_delta_bytes,
+)
 from repro.core.networks import (
     resnet50_conv_layers,
     smoke_conv_layers,
+    sparse_conv_layers,
     vgg16_conv_layers,
 )
 from repro.observability import format_table, reconcile, totals, trace
@@ -61,6 +74,20 @@ NET_LAYERS = {
 # ``<net>_fused`` runs the same layer set with a per-layer fused epilogue
 # (folded-BN scale/bias + ReLU; residual on the bottleneck-closing 1x1s).
 FUSED_SUFFIX = "_fused"
+# ``<net>_sparse`` runs the structured-pruned twin of the layer set, each
+# pruned dispatch tagged with its dense twin (keep-fraction in the spans).
+SPARSE_SUFFIX = "_sparse"
+
+
+def _sparsity_tags(base: str) -> tuple[list, dict[str, SparsityTag]]:
+    """Sparse twin layer set of ``base`` + per-layer dense-twin tags."""
+    layers = sparse_conv_layers(base)
+    dense = {l.name: l for l in NET_LAYERS[base]()}
+    tags = {l.name: SparsityTag(dense_ic=dense[l.name].IC,
+                                dense_k=dense[l.name].K)
+            for l in layers
+            if (dense[l.name].IC, dense[l.name].K) != (l.IC, l.K)}
+    return layers, tags
 
 
 def _layer_operands(layer, batch: int, key):
@@ -89,14 +116,19 @@ def _layer_epilogue(layer, batch: int, key) -> Epilogue:
 
 
 def run_network(layers, batch: int, reps: int, impl: str = "auto",
-                fused: bool = False):
+                fused: bool = False, sparsity=None):
     """Warm every layer (compile), then record ``reps`` traced dispatches and
-    keep each layer's best (min-wall) span — the compile-free steady state."""
+    keep each layer's best (min-wall) span — the compile-free steady state.
+
+    ``sparsity``: optional ``{layer name: SparsityTag}`` for pruned layer
+    sets — tagged dispatches record keep-fraction / dense-twin MACs."""
     key = jax.random.PRNGKey(0)
     best: dict[str, object] = {}
     for i, layer in enumerate(layers):
         x, w = _layer_operands(layer, batch, jax.random.fold_in(key, i))
         kw = dict(stride=layer.S, padding=layer.Z, impl=impl, name=layer.name)
+        if sparsity and layer.name in sparsity:
+            kw["sparsity"] = sparsity[layer.name]
         if fused:
             kw["epilogue"] = _layer_epilogue(layer, batch,
                                              jax.random.fold_in(key, 1000 + i))
@@ -229,6 +261,54 @@ def collect_fused_delta(net: str, batch: int = 1, reps: int = 2,
     }
 
 
+def collect_sparse_delta(networks: dict) -> dict:
+    """Pair each ``<base>_sparse`` record with its dense ``<base>`` twin.
+
+    Layers pair by name (the sparse layer tables reuse the dense names), so
+    per layer the delta carries measured ms/bytes on both sides plus the
+    keep-fraction the spans recorded.  ``check_regression.py`` enforces the
+    invariant on the ``pruned`` entries: strictly fewer bytes, and no slower
+    than the dense twin beyond the noise band.
+    """
+    out: dict = {}
+    for net, sn in networks.items():
+        if not net.endswith(SPARSE_SUFFIX):
+            continue
+        base = net[:-len(SPARSE_SUFFIX)]
+        dn = networks.get(base)
+        if dn is None:
+            continue
+        dense = {l["layer"]: l for l in dn["layers"]}
+        layers = []
+        for sl in sn["layers"]:
+            dl = dense.get(sl["layer"])
+            if dl is None:
+                continue
+            layers.append({
+                "layer": sl["layer"],
+                "pruned": bool(sl.get("pruned", False)),
+                "keep_fraction": sl.get("keep_fraction", 1.0),
+                "dense_ms": dl["measured_ms"],
+                "sparse_ms": sl["measured_ms"],
+                "dense_bytes_mb": dl["bytes_mb"],
+                "sparse_bytes_mb": sl["bytes_mb"],
+                "saved_mb": dl["bytes_mb"] - sl["bytes_mb"],
+                "speedup": dl["measured_ms"] / max(sl["measured_ms"], 1e-9),
+            })
+        pruned = [l for l in layers if l["pruned"]]
+        out[base] = {
+            "layers": layers,
+            "pruned_layers": len(pruned),
+            "total_dense_ms": sum(l["dense_ms"] for l in layers),
+            "total_sparse_ms": sum(l["sparse_ms"] for l in layers),
+            "total_saved_mb": sum(l["saved_mb"] for l in layers),
+            "total_speedup": (sum(l["dense_ms"] for l in layers)
+                              / max(sum(l["sparse_ms"] for l in layers),
+                                    1e-9)),
+        }
+    return out
+
+
 def collect_bench(nets: list[str], batch: int = 1, reps: int = 2,
                   impl: str = "auto", smoke: bool = False,
                   tuned: bool = False) -> dict:
@@ -240,16 +320,20 @@ def collect_bench(nets: list[str], batch: int = 1, reps: int = 2,
 
     A net named ``<base>_fused`` measures ``<base>``'s layer set through the
     fused-epilogue path (and triggers the per-bottleneck-block fused-vs-
-    unfused delta measurement, recorded under ``fused_delta``).
+    unfused delta measurement, recorded under ``fused_delta``).  A net named
+    ``<base>_sparse`` measures the structured-pruned twin of ``<base>``'s
+    layer set, every pruned dispatch tagged with its dense twin; when the
+    dense ``<base>`` is measured in the same record, the per-layer dense-vs-
+    sparse comparison lands under ``sparse_delta``.
 
     ``tuned=True`` enables the empirical tuning cache for the whole
     measurement (span attrs record ``tuned``/``tile_config``/``tile_util``)
-    and additionally measures, per base net, every tuned shape key through
+    and additionally measures, per net, every tuned shape key through
     the pallas kernels with the tuned tiles vs the hardcoded defaults — the
     ``tuning`` section ``check_regression.py`` gates on.
     """
     record: dict = {
-        "version": 3,
+        "version": 4,
         "backend": jax.default_backend(),
         "impl": impl,
         "batch": batch,
@@ -259,6 +343,7 @@ def collect_bench(nets: list[str], batch: int = 1, reps: int = 2,
         "kernel_hash": autotune.kernel_signature_hash(),
         "networks": {},
         "fused_delta": {},
+        "sparse_delta": {},
         "tuning": {},
     }
     prev_enabled = autotune.enabled()
@@ -268,8 +353,14 @@ def collect_bench(nets: list[str], batch: int = 1, reps: int = 2,
         for net in nets:
             fused = net.endswith(FUSED_SUFFIX)
             base = net[:-len(FUSED_SUFFIX)] if fused else net
-            layers = NET_LAYERS[base]()
-            spans = run_network(layers, batch, reps, impl, fused=fused)
+            sparse = base.endswith(SPARSE_SUFFIX)
+            if sparse:
+                base = base[:-len(SPARSE_SUFFIX)]
+                layers, tags = _sparsity_tags(base)
+            else:
+                layers, tags = NET_LAYERS[base](), None
+            spans = run_network(layers, batch, reps, impl, fused=fused,
+                                sparsity=tags)
             rows = reconcile(spans)
             t = totals(rows)
             record["networks"][net] = {
@@ -277,6 +368,7 @@ def collect_bench(nets: list[str], batch: int = 1, reps: int = 2,
                 "total_analytic_ms": t["analytic_ms"],
                 "speed_ratio": t["speed_ratio"],
                 "total_fused_saved_mb": t["fused_saved_mb"],
+                "mac_keep_fraction": t["mac_keep_fraction"],
                 "layers": [{
                     "layer": r.layer,
                     "dataflow": r.dataflow,
@@ -292,18 +384,24 @@ def collect_bench(nets: list[str], batch: int = 1, reps: int = 2,
                     "tuned": r.tuned,
                     "tile_config": r.tile_config,
                     "tuning_source": r.tuning_source,
+                    "pruned": r.pruned,
+                    "keep_fraction": r.keep_fraction,
+                    "macs": r.macs,
+                    "dense_twin_macs": r.dense_twin_macs,
                 } for r in rows],
             }
             if fused:
                 record["fused_delta"][base] = collect_fused_delta(
                     base, batch=batch, reps=reps, smoke=smoke)
-            if tuned and base not in record["tuning"]:
+            if tuned and net not in record["tuning"] and not fused:
                 from .autotune import collect_tuning_delta
-                record["tuning"][base] = collect_tuning_delta(
-                    base, batch=batch, reps=reps)
+                record["tuning"][net] = collect_tuning_delta(
+                    base, batch=batch, reps=reps,
+                    layers=layers if sparse else None)
     finally:
         if tuned and not prev_enabled:
             autotune.disable()
+    record["sparse_delta"] = collect_sparse_delta(record["networks"])
     return record
 
 
@@ -349,6 +447,10 @@ def main() -> None:
                     help="dispatch each layer with a fused epilogue "
                          "(folded-BN scale/bias + ReLU; residual on "
                          "bottleneck-closing 1x1s)")
+    ap.add_argument("--sparse", action="store_true",
+                    help="run the structured-pruned twin of the layer set "
+                         "(paper Table I); pruned dispatches are tagged with "
+                         "their dense twin (keep%% column)")
     ap.add_argument("--peak-gflops", type=float, default=0.0,
                     help="backend peak for util%% (0 = best layer in run)")
     ap.add_argument("--json", default=None,
@@ -370,14 +472,20 @@ def main() -> None:
         net, reps, skip_overhead = "smoke", 1, True
     else:
         net, reps, skip_overhead = args.net, args.reps, args.skip_overhead
-    layers = NET_LAYERS[net]()
+    tags = None
+    if args.sparse:
+        layers, tags = _sparsity_tags(net)
+        net = net + SPARSE_SUFFIX
+    else:
+        layers = NET_LAYERS[net]()
     if args.limit:
         layers = layers[:args.limit]
 
     print(f"=== {net}: analytic (ASIC @200 MHz, batch-1) vs measured "
           f"({jax.default_backend()}, batch={args.batch}, impl={args.impl}"
           f"{', fused epilogue' if args.fused else ''}) ===")
-    spans = run_network(layers, args.batch, reps, args.impl, fused=args.fused)
+    spans = run_network(layers, args.batch, reps, args.impl, fused=args.fused,
+                        sparsity=tags)
     rows = reconcile(spans, peak_gflops=args.peak_gflops or None)
     print(format_table(rows))
 
@@ -388,6 +496,9 @@ def main() -> None:
           f"{t['measured_bytes_mb']:.1f} MB arrays | "
           f"fused-epilogue HBM saved {t['fused_saved_mb']:.1f} MB | "
           f"wall/ASIC = {t['speed_ratio']:.2f}x")
+    if t["pruned_layers"]:
+        print(f"structured sparsity: {t['pruned_layers']} pruned layers, "
+              f"{t['mac_keep_fraction'] * 100:.1f}% of dense-twin MACs kept")
     by_mode: dict[str, int] = {}
     for r in rows:
         by_mode[r.dataflow] = by_mode.get(r.dataflow, 0) + 1

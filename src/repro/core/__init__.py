@@ -24,17 +24,27 @@ from .networks import (
     resnet50_conv_layers,
     resnet50_projection_shortcuts,
     smoke_conv_layers,
+    sparse_conv_layers,
     vgg16_conv_layers,
+)
+from .sparsity import (
+    SparsityTag,
+    prune_bn,
+    prune_conv_weights,
+    prune_plan,
+    topk_channel_mask,
 )
 
 __all__ = [
     "ConvLayer", "ConvPlan", "Dataflow", "Epilogue", "LayerCost",
-    "NetworkCost", "Stationarity", "TileConfig", "apply_epilogue",
-    "autotune", "carla_conv",
+    "NetworkCost", "SparsityTag", "Stationarity", "TileConfig",
+    "apply_epilogue", "autotune", "carla_conv",
     "epilogue_dram_delta", "epilogue_dram_delta_bytes", "fold_bn",
     "fold_bn_into_conv", "kernel_signature_hash", "layer_cost",
-    "network_cost", "plan_conv",
+    "network_cost", "plan_conv", "prune_bn", "prune_conv_weights",
+    "prune_plan",
     "resnet50_conv_layers", "resnet50_projection_shortcuts", "resnet50_cost",
     "select_dataflow", "select_stationarity", "smoke_conv_layers",
+    "sparse_conv_layers", "topk_channel_mask",
     "vgg16_conv_layers", "vgg16_cost",
 ]

@@ -27,6 +27,7 @@ from .autotune import TileConfig
 from .cost_model import LayerCost, layer_cost
 from .fuse import Epilogue
 from .modes import ConvLayer, Dataflow, select_dataflow
+from .sparsity import SparsityTag
 
 
 _NO_EPILOGUE = Epilogue()
@@ -102,12 +103,16 @@ def _dispatch(x, w, plan: ConvPlan, stride: int, padding: int, impl: str,
 def carla_conv(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1,
                padding: int = 0, impl: str = "auto",
                epilogue: Epilogue | None = None,
-               name: str = "conv") -> jnp.ndarray:
+               name: str = "conv",
+               sparsity: SparsityTag | None = None) -> jnp.ndarray:
     """Reconfigurable convolution: dispatches on the controller's mode choice.
 
     x: (B, H, W, C); w: (FH, FW, C, K) (use (1, 1, C, K) or (C, K) for 1x1).
     epilogue: optional fused flush (folded-BN scale/bias, residual add, ReLU)
     applied on the fp32 accumulator before the single HBM writeback.
+    sparsity: for a structured-pruned layer, the dense twin's channel counts
+    (``core.sparsity.SparsityTag``) — the span then records ``keep_fraction``
+    and ``dense_twin_macs`` so pruned-vs-dense is measurable per layer.
 
     With tracing enabled (``observability.trace``) every dispatch records a
     ``carla_conv`` span carrying both sides of the paper's ledger: the
@@ -138,6 +143,14 @@ def carla_conv(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1,
     else:
         tile_util = autotune.tile_util_conv2d(x.shape, w.shape,
                                               plan.tile_config)
+    sparse_attrs = {}
+    if sparsity is not None:
+        sparse_attrs = {
+            "pruned": True,
+            "keep_fraction": sparsity.keep_fraction(plan.layer.IC,
+                                                    plan.layer.K),
+            "dense_twin_macs": sparsity.dense_twin(plan.layer).macs,
+        }
     with trace.span(
             "carla_conv", layer=plan.layer.name,
             dataflow=plan.dataflow.value, epilogue=ep.tag,
@@ -153,7 +166,8 @@ def carla_conv(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1,
                          if plan.tile_config is not None else "default"),
             tuning_source=plan.tuning_source,
             tile_util=tile_util,
-            effective_dataflow=plan.effective_dataflow.value) as sp:
+            effective_dataflow=plan.effective_dataflow.value,
+            **sparse_attrs) as sp:
         out = _dispatch(x, w, plan, stride, padding, impl, epilogue)
         jax.block_until_ready(out)
         # bytes the dispatch actually touched (operands + result); the child

@@ -78,16 +78,47 @@ def vgg16_conv_layers() -> list[ConvLayer]:
     ]
 
 
-def smoke_conv_layers() -> list[ConvLayer]:
+def smoke_conv_layers(sparse: bool = False) -> list[ConvLayer]:
     """Tiny layers covering every dataflow the controller can pick.
 
     Shapes are chosen so the whole set compiles and runs in seconds on CPU;
     benchmark CLIs use this for their ``--smoke`` mode (CI liveness, not
     performance claims).
+
+    ``sparse=True`` returns the structured-pruned twins (same names, same
+    dataflow assignment, channels halved following the Table I pattern:
+    out-pruned 3x3/7x7, in-pruned 1x1s) so the sparse bench/gate path has a
+    CI-sized layer set whose every layer touches fewer bytes than its twin.
     """
+    if sparse:
+        return [
+            ConvLayer("smoke_3x3", IL=14, IC=4, K=8, FL=3, S=1, Z=1),
+            ConvLayer("smoke_1x1_fs", IL=28, IC=8, K=8, FL=1),
+            ConvLayer("smoke_1x1_ws", IL=7, IC=8, K=8, FL=1),
+            ConvLayer("smoke_7x7", IL=28, IC=3, K=4, FL=7, S=2, Z=3),
+        ]
     return [
         ConvLayer("smoke_3x3", IL=14, IC=8, K=16, FL=3, S=1, Z=1),
         ConvLayer("smoke_1x1_fs", IL=28, IC=16, K=8, FL=1),
         ConvLayer("smoke_1x1_ws", IL=7, IC=16, K=8, FL=1),
         ConvLayer("smoke_7x7", IL=28, IC=3, K=8, FL=7, S=2, Z=3),
     ]
+
+
+# Layer tables that have a structured-sparse twin (same layer names, pruned
+# channel counts) — the benchmark CLIs' ``--sparse`` universe.
+SPARSE_NETS = ("resnet50", "smoke")
+
+
+def sparse_conv_layers(net: str) -> list[ConvLayer]:
+    """The structured-sparse twin of a net's layer table.
+
+    Layer names match the dense table exactly, so dense/sparse records pair
+    by name (the ``sparse_delta`` section of the bench record).
+    """
+    if net == "resnet50":
+        return resnet50_conv_layers(sparse=True)
+    if net == "smoke":
+        return smoke_conv_layers(sparse=True)
+    raise KeyError(f"no structured-sparse layer table for {net!r} "
+                   f"(have {list(SPARSE_NETS)})")

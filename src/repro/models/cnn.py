@@ -13,16 +13,29 @@ particular the shortcut add is fused into the block's last 1x1 conv.
 oracle, and the unfused baseline for the bytes-saved benchmarks).
 
 Supports a ``width`` scale factor so smoke tests can instantiate the same
-topology at reduced width, and channel-keep masks for the structured-sparse
-variant (§IV.A).
+topology at reduced width, and the structured-sparse variant (§IV.A):
+``resnet50_prune`` walks a dense pytree and prunes channels by L1 importance
+— residual-aware (masks propagate 1x1a -> 3x3 -> 1x1b through each
+bottleneck; the shortcut trunk stays dense per Table I) — and
+``resnet50_apply(..., sparse=True | keep_fractions=...)`` runs the pruned
+network through the same fused dispatch path, tagging every pruned dispatch
+with its dense twin so telemetry reports keep-fraction and pruned-vs-dense
+MACs.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.carla import carla_conv, plan_conv
 from repro.core.fuse import Epilogue
+from repro.core.sparsity import (
+    SparsityTag,
+    prune_bn,
+    prune_conv_weights,
+    topk_channel_mask,
+)
 
 
 def _conv_init(key, fl: int, cin: int, k: int):
@@ -42,7 +55,7 @@ def _bn(params, x):
 
 def _conv_bn(x, w, bn, *, fused: bool, relu: bool = False,
              residual=None, stride: int = 1, padding: int = 0,
-             impl: str = "auto"):
+             impl: str = "auto", name: str = "conv", sparsity=None):
     """conv + folded-BN (+residual) (+ReLU), fused into the kernel flush or
     as the unfused op-by-op sequence (the parity/bytes baseline)."""
     if fused:
@@ -50,8 +63,9 @@ def _conv_bn(x, w, bn, *, fused: bool, relu: bool = False,
                       bias=None if bn is None else bn["bias"],
                       relu=relu, residual=residual)
         return carla_conv(x, w, stride=stride, padding=padding, impl=impl,
-                          epilogue=ep)
-    y = carla_conv(x, w, stride=stride, padding=padding, impl=impl)
+                          epilogue=ep, name=name, sparsity=sparsity)
+    y = carla_conv(x, w, stride=stride, padding=padding, impl=impl,
+                   name=name, sparsity=sparsity)
     if bn is not None:
         y = _bn(bn, y)
     if residual is not None:
@@ -60,6 +74,9 @@ def _conv_bn(x, w, bn, *, fused: bool, relu: bool = False,
 
 
 # ------------------------------- ResNet-50 -----------------------------------
+RESNET50_BLOCKS = {"conv2": 3, "conv3": 4, "conv4": 6, "conv5": 3}
+
+
 def resnet50_init(key, *, width: float = 1.0, num_classes: int = 1000,
                   sparse: bool = False):
     """Bottleneck ResNet-50; `width` scales all channel counts (smoke tests)."""
@@ -94,33 +111,110 @@ def resnet50_init(key, *, width: float = 1.0, num_classes: int = 1000,
     return params
 
 
-def resnet50_apply(params, x, *, impl: str = "auto", fused: bool = True):
+def _group_keep_fraction(keep_fractions, gname: str) -> float:
+    """Resolve a scalar or per-group-dict keep_fractions for one group."""
+    if isinstance(keep_fractions, dict):
+        return float(keep_fractions.get(gname, 1.0))
+    return float(keep_fractions)
+
+
+def resnet50_prune(params, keep_fractions=0.5):
+    """Residual-aware structured pruning of a dense ``resnet50_init`` pytree.
+
+    Per bottleneck block (paper Table I): the first two convs' output
+    channels are pruned by L1 importance, each kept-channel mask propagates
+    to the next conv's *input* channels (1x1a -> 3x3 -> 1x1b), and the
+    folded-BN scale/bias vectors are pruned alongside their conv so the
+    fused epilogue operands stay consistent.  The block-closing 1x1 keeps
+    its output channels and the shortcut trunk (conv1, projections, block
+    outputs, fc) stays dense, so every residual add still lines up.
+
+    keep_fractions: a scalar applied to every group, or a dict keyed by
+    group name (``"conv2"``..``"conv5"``; missing groups stay dense).
+    Returns ``(pruned_params, masks)`` with ``masks[f"{g}_b{b}"] = (m1, m2)``
+    — the kept-channel masks of the block's first and second conv.
+    """
+    pruned = dict(params)
+    masks: dict[str, tuple[np.ndarray, np.ndarray]] = {}
+    for gname, nb in RESNET50_BLOCKS.items():
+        kf = _group_keep_fraction(keep_fractions, gname)
+        for b in range(nb):
+            bname = f"{gname}_b{b}"
+            blk = params[bname]
+            if kf >= 1.0:
+                masks[bname] = (np.ones(blk["c1"].shape[-1], bool),
+                                np.ones(blk["c2"].shape[-1], bool))
+                continue
+            m1 = topk_channel_mask(blk["c1"], kf)
+            m2 = topk_channel_mask(blk["c2"], kf)
+            nblk = dict(blk)
+            nblk["c1"] = prune_conv_weights(blk["c1"], m1)
+            nblk["bn1"] = prune_bn(blk["bn1"], m1)
+            nblk["c2"] = prune_conv_weights(blk["c2"], m2, keep_in=m1)
+            nblk["bn2"] = prune_bn(blk["bn2"], m2)
+            # block-closing 1x1: input channels follow m2, outputs stay dense
+            nblk["c3"] = prune_conv_weights(blk["c3"], keep_in=m2)
+            pruned[bname] = nblk
+            masks[bname] = (m1, m2)
+    return pruned, masks
+
+
+def resnet50_apply(params, x, *, impl: str = "auto", fused: bool = True,
+                   sparse: bool = False, keep_fractions=None):
     """x: (B, H, W, 3) -> (B, num_classes).  All convs via carla_conv.
 
     fused=True (default): BN + ReLU (+ the bottleneck residual add, fused
     into the last 1x1 conv of each block) ride the kernel flush epilogue.
+
+    sparse=True (or an explicit ``keep_fractions``, scalar or per-group
+    dict) runs the structured-sparse variant: ``params`` is pruned via
+    ``resnet50_prune`` and the pruned network runs through the same fused
+    dispatch path, with every pruned dispatch tagged by its dense twin
+    (``SparsityTag``) so traced spans carry keep-fraction / dense-twin MACs.
+    A pytree that is *already* pruned runs as-is with ``sparse=False`` —
+    the forward is shape-polymorphic; the flags exist to prune and to tag.
     """
+    if sparse and keep_fractions is None:
+        keep_fractions = 0.5
+    dense_dims = None
+    if keep_fractions is not None:
+        dense_dims = {f"{g}_b{b}": {c: params[f"{g}_b{b}"][c].shape
+                                    for c in ("c1", "c2", "c3")}
+                      for g, nb in RESNET50_BLOCKS.items() for b in range(nb)}
+        params, _ = resnet50_prune(params, keep_fractions)
+
+    def tag(bname, cname, w):
+        if dense_dims is None:
+            return None
+        ds = dense_dims[bname][cname]
+        if tuple(ds) == tuple(w.shape):
+            return None
+        return SparsityTag(dense_ic=ds[-2], dense_k=ds[-1])
+
     x = _conv_bn(x, params["conv1"], params["bn1"], fused=fused, relu=True,
-                 stride=2, padding=3, impl=impl)
+                 stride=2, padding=3, impl=impl, name="conv1")
     # 3x3/2 maxpool
     x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
                               (1, 2, 2, 1), "SAME")
-    n_blocks = {"conv2": 3, "conv3": 4, "conv4": 6, "conv5": 3}
-    for gname, nb in n_blocks.items():
+    for gname, nb in RESNET50_BLOCKS.items():
         for b in range(nb):
-            blk = params[f"{gname}_b{b}"]
+            bname = f"{gname}_b{b}"
+            blk = params[bname]
             stride = 2 if (b == 0 and gname != "conv2") else 1
             sc = x
             if "proj" in blk:
                 sc = _conv_bn(x, blk["proj"], blk["bnp"], fused=fused,
-                              stride=stride, impl=impl)
+                              stride=stride, impl=impl, name=f"{bname}_proj")
             h = _conv_bn(x, blk["c1"], blk["bn1"], fused=fused, relu=True,
-                         stride=stride, impl=impl)
+                         stride=stride, impl=impl, name=f"{bname}_1x1a",
+                         sparsity=tag(bname, "c1", blk["c1"]))
             h = _conv_bn(h, blk["c2"], blk["bn2"], fused=fused, relu=True,
-                         padding=1, impl=impl)
+                         padding=1, impl=impl, name=f"{bname}_3x3",
+                         sparsity=tag(bname, "c2", blk["c2"]))
             # residual add fused into the block's last 1x1 conv
             x = _conv_bn(h, blk["c3"], blk["bn3"], fused=fused, relu=True,
-                         residual=sc, impl=impl)
+                         residual=sc, impl=impl, name=f"{bname}_1x1b",
+                         sparsity=tag(bname, "c3", blk["c3"]))
     x = jnp.mean(x, axis=(1, 2))
     return x @ params["fc"]["w"].astype(x.dtype)
 

@@ -51,6 +51,12 @@ class ReconRow:
     tile_config: str = "default"
     tuning_source: str = "analytic"
     tile_util: float = 1.0       # logical FLOPs / padded FLOPs
+    # structured-sparsity ledger (PR 10): was the layer channel-pruned, what
+    # MAC fraction it kept vs its dense twin
+    pruned: bool = False
+    macs: int = 0
+    keep_fraction: float = 1.0
+    dense_twin_macs: int = 0
 
     @property
     def speed_ratio(self) -> float:
@@ -100,6 +106,10 @@ def reconcile(spans: list[Span],
             tile_config=a.get("tile_config", "default"),
             tuning_source=a.get("tuning_source", "analytic"),
             tile_util=float(a.get("tile_util", 1.0)),
+            pruned=bool(a.get("pruned", False)),
+            macs=int(a.get("macs", 0)),
+            keep_fraction=float(a.get("keep_fraction", 1.0)),
+            dense_twin_macs=int(a.get("dense_twin_macs", a.get("macs", 0))),
         ))
     return out
 
@@ -110,6 +120,7 @@ def totals(rows: list[ReconRow]) -> dict:
         return {}
     an_ms = sum(r.analytic_ms for r in rows)
     me_ms = sum(r.measured_ms / max(1, r.batch) for r in rows)
+    twin_macs = sum(r.dense_twin_macs for r in rows)
     return {
         "layers": len(rows),
         "analytic_ms": an_ms,
@@ -118,6 +129,10 @@ def totals(rows: list[ReconRow]) -> dict:
         "measured_bytes_mb": sum(r.measured_bytes_mb for r in rows),
         "fused_saved_mb": sum(r.fused_saved_mb for r in rows),
         "speed_ratio": me_ms / an_ms if an_ms else float("inf"),
+        "pruned_layers": sum(1 for r in rows if r.pruned),
+        # kept MAC fraction over the whole net vs the dense twins (1.0 dense)
+        "mac_keep_fraction": (sum(r.macs for r in rows) / twin_macs
+                              if twin_macs else 1.0),
     }
 
 
@@ -125,7 +140,7 @@ def format_table(rows: list[ReconRow]) -> str:
     """Fixed-width text table: analytic columns left, measured columns right."""
     headers = ["layer", "dataflow", "cycles", "an.ms", "an.MB", "PUF%",
                "B", "ms", "MB", "GFLOP/s", "util%", "x-ASIC",
-               "epilogue", "savedMB", "tile%", "tiles"]
+               "epilogue", "savedMB", "tile%", "tiles", "keep%"]
     cells = [[
         r.layer, r.dataflow.replace("_", "-"),
         f"{r.analytic_cycles:,}", f"{r.analytic_ms:7.3f}",
@@ -135,6 +150,7 @@ def format_table(rows: list[ReconRow]) -> str:
         f"{r.speed_ratio:6.2f}", r.epilogue, f"{r.fused_saved_mb:6.2f}",
         f"{r.tile_util * 100:5.1f}",
         r.tile_config if r.tuned else "default",
+        f"{r.keep_fraction * 100:5.1f}" if r.pruned else "dense",
     ] for r in rows]
     widths = [max(len(h), *(len(c[i]) for c in cells)) if cells else len(h)
               for i, h in enumerate(headers)]

@@ -66,16 +66,56 @@ def test_benchmarks_run_smoke_cli_and_regression_gate(tmp_path):
 
 
 @pytest.mark.slow
+def test_benchmarks_run_sparse_smoke_cli_and_sparse_gate(tmp_path):
+    """--sparse rides the smoke bench: the record gains the sparse twin net
+    and the per-layer dense-vs-sparse delta, the gate holds the sparse
+    invariant on it, and the injection self-test proves the invariant trips."""
+    bench = str(tmp_path / "bench.json")
+    r = _run("benchmarks.run", "--smoke", "--sparse", "--bench-json", bench)
+    assert r.returncode == 0, r.stderr
+    with open(bench) as f:
+        rec = json.load(f)
+    assert list(rec["networks"]) == ["smoke", "smoke_fused", "smoke_sparse"]
+    sd = rec["sparse_delta"]["smoke"]
+    pruned = [e for e in sd["layers"] if e["pruned"]]
+    assert len(pruned) == 4 and sd["pruned_layers"] == 4
+    # the measured invariant: strictly fewer bytes per pruned layer
+    assert all(e["sparse_bytes_mb"] < e["dense_bytes_mb"] for e in pruned)
+    assert all(0.0 < e["keep_fraction"] < 1.0 for e in pruned)
+    assert "sparse delta [smoke]" in r.stdout
+
+    # the gate passes the record against itself...
+    r = _run("benchmarks.check_regression", "--baseline", bench,
+             "--candidate", bench)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "smoke sparse: 4 pruned layers" in r.stdout
+    # ...and the sparse-invariant injection must trip it
+    r = _run("benchmarks.check_regression", "--baseline", bench,
+             "--candidate", bench, "--inject-sparse-violation")
+    assert r.returncode != 0
+    assert "not strictly below its dense twin" in r.stdout
+    # a uniform slowdown scales both sides of the sparse delta, so it trips
+    # the perf bands without faking a sparse-invariant violation
+    r = _run("benchmarks.check_regression", "--baseline", bench,
+             "--candidate", bench, "--inject-slowdown", "10")
+    assert r.returncode != 0
+    assert "not strictly below" not in r.stdout
+
+
+@pytest.mark.slow
 def test_regression_gate_smoke_against_committed_baseline():
-    """Tier-1 perf gate: fresh smoke measurement vs the committed BENCH_9
-    baseline — catches fused-path perf/bytes regressions at merge time."""
-    assert os.path.exists(os.path.join(REPO, "BENCH_9.json")), \
-        "BENCH_9.json baseline missing (benchmarks.run --bench-json --tuned)"
+    """Tier-1 perf gate: fresh smoke measurement vs the committed BENCH_10
+    baseline — catches fused-path and sparse-path regressions at merge time."""
+    assert os.path.exists(os.path.join(REPO, "BENCH_10.json")), \
+        "BENCH_10.json baseline missing (benchmarks.run --bench-json " \
+        "--tuned --sparse)"
     r = _run("benchmarks.check_regression", "--smoke")
     assert r.returncode == 0, r.stdout + r.stderr
     assert "perf gate: PASS" in r.stdout
-    # the smoke filter really selected the smoke nets, fused included
+    # the smoke filter really selected the smoke nets, fused and sparse
     assert "smoke_fused:" in r.stdout
+    assert "smoke_sparse:" in r.stdout
+    assert "smoke sparse:" in r.stdout
     # the baseline is tuned, so the fresh run re-measures the tuned deltas
     assert "smoke tuning:" in r.stdout
 

@@ -315,16 +315,21 @@ def test_check_regression_flags_structural_changes():
 
 
 def test_committed_baseline_is_self_consistent():
-    """The committed BENCH_8.json must pass the gate against itself."""
-    from benchmarks.check_regression import DEFAULT_BASELINE, compare, load
+    """The committed BENCH_10.json must pass the gate against itself."""
+    from benchmarks.check_regression import (DEFAULT_BASELINE, check_sparse,
+                                             compare, load)
 
     base = load(DEFAULT_BASELINE)
     assert compare(base, base) == []
-    # each net measured unfused and fused, plus the smoke sets for tier-1 CI
-    assert set(base["networks"]) == {"smoke", "smoke_fused",
+    assert check_sparse(base) == []
+    # each net measured unfused and fused, plus the structured-sparse twins
+    # and the smoke sets for tier-1 CI
+    assert set(base["networks"]) == {"smoke", "smoke_fused", "smoke_sparse",
                                      "resnet50", "resnet50_fused",
+                                     "resnet50_sparse",
                                      "vgg16", "vgg16_fused"}
     assert len(base["networks"]["resnet50"]["layers"]) == 49
+    assert len(base["networks"]["resnet50_sparse"]["layers"]) == 49
     assert len(base["networks"]["vgg16"]["layers"]) == 13
     for name, net in base["networks"].items():
         fused = name.endswith("_fused")
@@ -339,3 +344,11 @@ def test_committed_baseline_is_self_consistent():
     for fd in base["fused_delta"].values():
         for blk in fd["blocks"]:
             assert blk["fused_bytes_mb"] < blk["unfused_bytes_mb"]
+    # ...and so does the sparse invariant: every pruned layer of the sparse
+    # twins touches strictly fewer bytes than its dense counterpart
+    assert set(base["sparse_delta"]) == {"smoke", "resnet50"}
+    assert base["sparse_delta"]["resnet50"]["pruned_layers"] == 48
+    for sd in base["sparse_delta"].values():
+        for entry in sd["layers"]:
+            if entry["pruned"]:
+                assert entry["sparse_bytes_mb"] < entry["dense_bytes_mb"]

@@ -1,0 +1,322 @@
+"""Structured sparsity: masks, plan propagation, pruned-forward parity.
+
+The pruning primitives must be deterministic (stable tie-breaks) and strict
+(mask validation), the residual-aware ResNet-50 planner must keep every
+bottleneck's residual add aligned, and the pruned network must agree with a
+zeroed-channel dense oracle across all four CARLA dataflows, both execution
+engines, and both the fused and unfused epilogue paths.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Epilogue,
+    apply_epilogue,
+    carla_conv,
+    plan_conv,
+    prune_bn,
+    prune_conv_weights,
+    prune_plan,
+    topk_channel_mask,
+)
+from repro.core.cost_model import layer_cost
+from repro.core.modes import Dataflow
+from repro.core.networks import smoke_conv_layers, sparse_conv_layers
+from repro.core.sparsity import SparsityTag
+from repro.models import cnn
+from repro.observability import trace
+
+
+def _err(a, b):
+    return float(jnp.max(jnp.abs(jnp.asarray(a, jnp.float32) -
+                                 jnp.asarray(b, jnp.float32))))
+
+
+# ------------------------------ mask determinism ------------------------------
+def test_topk_mask_keeps_highest_l1():
+    w = np.zeros((3, 3, 2, 4), np.float32)
+    w[..., 1] = 3.0
+    w[..., 3] = 2.0
+    w[..., 0] = 1.0
+    mask = topk_channel_mask(w, 0.5)
+    assert mask.tolist() == [False, True, False, True]
+
+
+def test_topk_mask_tie_break_is_stable():
+    """Tied L1 norms keep the lowest-indexed channels, on every call."""
+    w = np.ones((1, 1, 4, 8), np.float32)      # all channels tie exactly
+    mask = topk_channel_mask(w, 0.5)
+    assert mask.tolist() == [True] * 4 + [False] * 4
+    for _ in range(5):
+        assert np.array_equal(topk_channel_mask(w, 0.5), mask)
+    # a partial tie: channels {0,2,5} share the top norm, keep 2 of 3 tied
+    w2 = np.ones((1, 1, 2, 6), np.float32) * 0.1
+    for c in (0, 2, 5):
+        w2[..., c] = 7.0
+    m2 = topk_channel_mask(w2, 2 / 6)
+    assert m2.tolist() == [True, False, True, False, False, False]
+
+
+def test_topk_mask_keep_fraction_bounds():
+    w = np.ones((1, 1, 2, 4), np.float32)
+    assert topk_channel_mask(w, 1.0).all()
+    assert topk_channel_mask(w, 1e-9).sum() == 1   # floor of one channel
+    for bad in (0.0, -0.5, 1.5):
+        with pytest.raises(ValueError):
+            topk_channel_mask(w, bad)
+
+
+# ------------------------------ prune_plan ------------------------------------
+def test_prune_plan_propagates_through_chain():
+    """Layer i's IC is layer i-1's pruned K; layer 0's IC is the real ic0."""
+    plan = prune_plan([64, 64, 256], [0.5, 0.5, 1.0], ic0=3)
+    assert plan == [(3, 32), (32, 32), (32, 256)]
+    # dense chain is the identity on widths
+    assert prune_plan([8, 16], [1.0, 1.0], ic0=4) == [(4, 8), (8, 16)]
+    # never prunes to zero channels
+    assert prune_plan([2], [0.1], ic0=3) == [(3, 1)]
+
+
+def test_prune_plan_length_mismatch_raises():
+    with pytest.raises(ValueError, match="must align"):
+        prune_plan([64, 128], [0.5], ic0=3)
+
+
+# ------------------------------ mask validation -------------------------------
+def test_prune_conv_weights_slices_both_dims():
+    w = jnp.arange(2 * 2 * 4 * 6, dtype=jnp.float32).reshape(2, 2, 4, 6)
+    keep_in = np.array([True, False, True, False])
+    keep_out = np.array([True] * 3 + [False] * 3)
+    got = prune_conv_weights(w, keep_out=keep_out, keep_in=keep_in)
+    assert got.shape == (2, 2, 2, 3)
+    assert jnp.array_equal(got, w[:, :, keep_in][..., keep_out])
+    # 2-D (1x1-as-GEMM) weights work the same way
+    w2 = w[0, 0]
+    assert prune_conv_weights(w2, keep_out=keep_out,
+                              keep_in=keep_in).shape == (2, 3)
+
+
+def test_prune_conv_weights_rejects_bad_masks():
+    w = jnp.zeros((3, 3, 4, 6))
+    with pytest.raises(ValueError, match="does not match"):
+        prune_conv_weights(w, keep_out=np.array([True, False]))
+    with pytest.raises(ValueError, match="does not match"):
+        prune_conv_weights(w, keep_in=np.ones(6, bool))
+    with pytest.raises(TypeError, match="must be boolean"):
+        prune_conv_weights(w, keep_out=np.array([1, 0, 1, 0, 1, 0]))
+    with pytest.raises(ValueError, match="zero channels"):
+        prune_conv_weights(w, keep_out=np.zeros(6, bool))
+
+
+def test_prune_bn_validation():
+    bn = {"scale": jnp.arange(4.0), "bias": jnp.arange(4.0) + 10}
+    keep = np.array([True, False, True, False])
+    got = prune_bn(bn, keep)
+    assert np.allclose(got["scale"], [0, 2]) and np.allclose(got["bias"],
+                                                             [10, 12])
+    with pytest.raises(ValueError, match="does not match"):
+        prune_bn(bn, np.ones(3, bool))
+    with pytest.raises(ValueError, match="inconsistent"):
+        prune_bn({"scale": jnp.zeros(4), "bias": jnp.zeros(5)}, keep)
+
+
+# --------------------- pruned-vs-dense dispatch parity ------------------------
+# One conv shape per dataflow; pruned channel counts keep the dataflow choice.
+DATAFLOW_CASES = {
+    Dataflow.CONV3X3_SERIAL_ACC: dict(il=14, ic=8, k=16, fl=3, s=1, z=1),
+    Dataflow.CONV1X1_FEATURE_STATIONARY: dict(il=28, ic=16, k=8, fl=1, s=1,
+                                              z=0),
+    Dataflow.CONV1X1_WEIGHT_STATIONARY: dict(il=7, ic=16, k=8, fl=1, s=1,
+                                             z=0),
+    Dataflow.CONV7X7_ROW_DECOMPOSED: dict(il=28, ic=4, k=8, fl=7, s=2, z=3),
+}
+
+
+@pytest.mark.parametrize("dataflow", list(DATAFLOW_CASES))
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+@pytest.mark.parametrize("fused", [False, True])
+def test_pruned_dispatch_matches_zeroed_dense(dataflow, impl, fused):
+    """Pruned conv == dense conv with pruned input channels zeroed, restricted
+    to kept output channels — per dataflow, per engine, fused and unfused."""
+    case = DATAFLOW_CASES[dataflow]
+    key = jax.random.PRNGKey(17)
+    x = jax.random.normal(key, (2, case["il"], case["il"], case["ic"]))
+    w = jax.random.normal(jax.random.fold_in(key, 1),
+                          (case["fl"], case["fl"], case["ic"], case["k"]))
+    w = w * (case["fl"] ** 2 * case["ic"]) ** -0.5
+    m_in = np.arange(case["ic"]) % 2 == 0          # keep half the inputs
+    m_out = topk_channel_mask(w, 0.5)
+    w_p = prune_conv_weights(w, keep_out=m_out, keep_in=m_in)
+
+    plan = plan_conv(x.shape, w.shape, stride=case["s"], padding=case["z"])
+    assert plan.dataflow == dataflow
+    plan_p = plan_conv(x[..., m_in].shape, w_p.shape, stride=case["s"],
+                       padding=case["z"])
+    assert plan_p.dataflow == dataflow             # pruning keeps the mode
+
+    kw = dict(stride=case["s"], padding=case["z"], impl=impl)
+    if fused:
+        sc = 1.0 + 0.2 * jax.random.normal(jax.random.fold_in(key, 2),
+                                           (case["k"],))
+        bi = 0.3 * jax.random.normal(jax.random.fold_in(key, 3), (case["k"],))
+        dense = carla_conv(x * m_in, w, **kw,
+                           epilogue=Epilogue(scale=sc, bias=bi, relu=True))
+        sparse = carla_conv(x[..., m_in], w_p, **kw,
+                            epilogue=Epilogue(scale=sc[m_out],
+                                              bias=bi[m_out], relu=True))
+    else:
+        dense = carla_conv(x * m_in, w, **kw)
+        sparse = carla_conv(x[..., m_in], w_p, **kw)
+    assert sparse.shape == dense[..., m_out].shape
+    assert _err(sparse, dense[..., m_out]) < 1e-4
+
+
+# ------------------------- ResNet-50 planner + forward ------------------------
+def _rand_bn(params, rng):
+    for k, v in params.items():
+        if k.startswith("bn") and isinstance(v, dict):
+            v["scale"] = np.asarray(rng.uniform(0.5, 1.5, len(v["scale"])),
+                                    np.float32)
+            v["bias"] = np.asarray(rng.uniform(-0.5, 0.5, len(v["bias"])),
+                                   np.float32)
+        elif isinstance(v, dict):
+            _rand_bn(v, rng)
+
+
+def _tiny_resnet(seed=0):
+    params = cnn.resnet50_init(jax.random.PRNGKey(seed), width=0.0625)
+    _rand_bn(params, np.random.default_rng(7))
+    x = np.asarray(np.random.default_rng(11).standard_normal((1, 56, 56, 3)),
+                   np.float32)
+    return params, x
+
+
+def test_resnet50_prune_shapes_and_residual_alignment():
+    params, _ = _tiny_resnet()
+    pruned, masks = cnn.resnet50_prune(params, keep_fractions=0.5)
+    assert set(masks) == {f"{g}_b{b}" for g, nb in cnn.RESNET50_BLOCKS.items()
+                          for b in range(nb)}
+    for bname, (m1, m2) in masks.items():
+        blk, dblk = pruned[bname], params[bname]
+        assert blk["c1"].shape[-1] == m1.sum() < dblk["c1"].shape[-1]
+        assert blk["bn1"]["scale"].shape[0] == m1.sum()
+        assert blk["c2"].shape[-2:] == (m1.sum(), m2.sum())
+        assert blk["bn2"]["scale"].shape[0] == m2.sum()
+        # block-closing 1x1: input follows m2, output stays dense so the
+        # residual add (and any projection) still lines up
+        assert blk["c3"].shape == (m2.sum(), dblk["c3"].shape[-1])
+        assert blk["bn3"]["scale"].shape == dblk["bn3"]["scale"].shape
+        if "proj" in dblk:
+            assert blk["proj"].shape == dblk["proj"].shape
+    # shortcut trunk untouched
+    assert pruned["conv1"].shape == params["conv1"].shape
+    assert pruned["fc"]["w"].shape == params["fc"]["w"].shape
+
+
+def test_resnet50_prune_per_group_dict():
+    params, _ = _tiny_resnet()
+    pruned, masks = cnn.resnet50_prune(params, keep_fractions={"conv3": 0.5})
+    assert masks["conv2_b0"][0].all()              # missing group stays dense
+    assert pruned["conv2_b0"]["c1"].shape == params["conv2_b0"]["c1"].shape
+    assert not masks["conv3_b0"][0].all()
+    assert (pruned["conv3_b0"]["c1"].shape[-1]
+            < params["conv3_b0"]["c1"].shape[-1])
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_resnet50_sparse_forward_matches_zeroed_dense(fused):
+    """The end-to-end oracle: zeroing a pruned channel's conv outputs AND its
+    BN scale/bias makes its post-ReLU activation exactly zero, so the pruned
+    net and the zeroed dense net must produce identical logits."""
+    params, x = _tiny_resnet()
+    sparse = cnn.resnet50_apply(params, x, impl="ref", fused=fused,
+                                sparse=True)
+    zeroed = jax.tree_util.tree_map(np.array, params)
+    _, masks = cnn.resnet50_prune(params, keep_fractions=0.5)
+    for bname, (m1, m2) in masks.items():
+        blk = zeroed[bname]
+        blk["c1"][..., ~m1] = 0
+        blk["bn1"]["scale"][~m1] = 0
+        blk["bn1"]["bias"][~m1] = 0
+        blk["c2"][..., ~m2] = 0
+        blk["bn2"]["scale"][~m2] = 0
+        blk["bn2"]["bias"][~m2] = 0
+    oracle = cnn.resnet50_apply(zeroed, x, impl="ref", fused=fused)
+    scale = max(1.0, float(np.max(np.abs(np.asarray(oracle)))))
+    assert _err(sparse, oracle) < 1e-4 * scale
+
+
+def test_resnet50_prepruned_pytree_runs_as_is():
+    """A pytree already pruned by resnet50_prune runs with sparse=False and
+    matches the flagged path exactly (the forward is shape-polymorphic)."""
+    params, x = _tiny_resnet()
+    via_flag = cnn.resnet50_apply(params, x, impl="ref", keep_fractions=0.5)
+    pruned, _ = cnn.resnet50_prune(params, keep_fractions=0.5)
+    as_is = cnn.resnet50_apply(pruned, x, impl="ref")
+    assert _err(via_flag, as_is) == 0.0
+
+
+# ------------------------------ telemetry attrs -------------------------------
+def test_sparse_spans_carry_keep_fraction_and_dense_twin():
+    params, x = _tiny_resnet()
+    trace.clear()
+    trace.enable()
+    try:
+        cnn.resnet50_apply(params, x, impl="ref", sparse=True)
+        spans = [s for root in trace.tracer.spans for s in root.walk()
+                 if s.name == "carla_conv"]
+    finally:
+        trace.disable()
+        trace.clear()
+    by_name = {s.attrs["layer"]: s.attrs for s in spans}
+    pruned = {n: a for n, a in by_name.items() if a.get("pruned")}
+    # every bottleneck contributes its three pruned convs; trunk stays dense
+    n_blocks = sum(cnn.RESNET50_BLOCKS.values())
+    assert len(pruned) == 3 * n_blocks
+    assert "conv1" in by_name and "pruned" not in by_name["conv1"]
+    assert "pruned" not in by_name["conv2_b0_proj"]
+    for a in pruned.values():
+        assert 0.0 < a["keep_fraction"] < 1.0
+        assert a["dense_twin_macs"] > a["macs"]
+        # at keep_fractions=0.5 every pruned conv halves at least one of its
+        # channel dims, so no pruned layer keeps more than ~half its MACs
+        assert a["keep_fraction"] <= 0.51
+
+
+def test_sparsity_tag_math():
+    tag = SparsityTag(dense_ic=64, dense_k=64)
+    assert tag.keep_fraction(32, 32) == 0.25
+    layer = smoke_conv_layers()[0]
+    twin = tag.dense_twin(layer)
+    assert (twin.IC, twin.K) == (64, 64)
+    assert twin.name == layer.name
+
+
+# ------------------------- sparse twins (layer sets) --------------------------
+@pytest.mark.parametrize("net", ["smoke", "resnet50"])
+def test_sparse_twin_layers_touch_fewer_bytes(net):
+    """Every pruned twin keeps its dense layer's dataflow and strictly cuts
+    the analytic DRAM bytes — the invariant the bench gate checks measured."""
+    from repro.core.networks import resnet50_conv_layers
+    dense = (smoke_conv_layers() if net == "smoke"
+             else resnet50_conv_layers())
+    sparse = sparse_conv_layers(net)
+    dense_by_name = {l.name: l for l in dense}
+    assert len(sparse) == len(dense)
+    pruned_twins = 0
+    for sl in sparse:
+        dl = dense_by_name[sl.name]
+        if (sl.IC, sl.K) == (dl.IC, dl.K):
+            continue
+        pruned_twins += 1
+        dc, sc = layer_cost(dl), layer_cost(sl)
+        assert sc.dataflow == dc.dataflow
+        assert sc.dram_bytes < dc.dram_bytes
+    assert pruned_twins > 0
+
+
+def test_sparse_conv_layers_unknown_net():
+    with pytest.raises(KeyError):
+        sparse_conv_layers("vgg16")
